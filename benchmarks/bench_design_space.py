@@ -1,0 +1,108 @@
+"""Beyond-paper design-space sweep:
+
+  * array-size scaling (B_v grows as 2B + log2 R -> the optimal asymmetry
+    and its savings grow with the array),
+  * robust multi-workload design points (average / weighted / minimax),
+  * output-stationary dataflow (asymmetry vanishes),
+  * bus-invert coding on the vertical bus composed with the asymmetric
+    floorplan (the paper's ref [19], quantified jointly).
+"""
+
+from __future__ import annotations
+
+from repro.core.energy import compare_sym_asym
+from repro.core.floorplan import (
+    BusActivity,
+    SystolicArrayGeometry,
+    accumulator_width,
+    bus_power,
+    optimal_aspect_power,
+)
+from repro.core.optimize import (
+    bus_invert_geometry,
+    max_regret,
+    os_dataflow_geometry,
+    robust_design_point,
+)
+from repro.core.switching import ActivityProfile
+
+ACT = BusActivity.paper_resnet50()
+
+
+def run() -> list[dict]:
+    out = []
+
+    # --- array-size scaling --------------------------------------------------
+    for r in (8, 16, 32, 64, 128):
+        geom = SystolicArrayGeometry(
+            rows=r, cols=r, b_h=16, b_v=accumulator_width(16, r)
+        )
+        c = compare_sym_asym(geom, ACT)
+        out.append(
+            {
+                "name": f"design_space/size_{r}x{r}_int16",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"B_v={geom.b_v} W/H*={optimal_aspect_power(geom, ACT):.2f} "
+                    f"interconnect_saving={c.interconnect_saving*100:.1f}%"
+                ),
+            }
+        )
+
+    # --- robust multi-workload design points ---------------------------------
+    geom = SystolicArrayGeometry.paper_32x32()
+    profiles = [
+        ActivityProfile(0.15, 0.30, 16, 37, 1000, 1000, 0.6),
+        ActivityProfile(0.25, 0.40, 16, 37, 1000, 1000, 0.5),
+        ActivityProfile(0.35, 0.45, 16, 37, 1000, 1000, 0.3),
+    ]
+    acts = [p.as_bus_activity() for p in profiles]
+    for strat in ("average", "minimax"):
+        d = robust_design_point(geom, profiles, strat)
+        out.append(
+            {
+                "name": f"design_space/robust_{strat}",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"W/H={d:.2f} max_regret={max_regret(geom, acts, d)*100:.2f}% "
+                    f"(vs square {max_regret(geom, acts, 1.0)*100:.2f}%)"
+                ),
+            }
+        )
+
+    # --- output-stationary ----------------------------------------------------
+    os_geom = os_dataflow_geometry(16, 32, 32)
+    out.append(
+        {
+            "name": "design_space/output_stationary",
+            "us_per_call": 0.0,
+            "derived": (
+                f"B_h=B_v={os_geom.b_h}: W/H*="
+                f"{optimal_aspect_power(os_geom, BusActivity(0.3, 0.3)):.2f} "
+                "(asymmetry is a WS-dataflow property)"
+            ),
+        }
+    )
+
+    # --- bus-invert composition ------------------------------------------------
+    geom2, act2 = bus_invert_geometry(geom, ACT)
+    p_square = bus_power(geom, ACT, 1.0)
+    p_asym = bus_power(geom, ACT, optimal_aspect_power(geom, ACT))
+    p_both = bus_power(geom2, act2, optimal_aspect_power(geom2, act2))
+    out.append(
+        {
+            "name": "design_space/bus_invert_plus_asym",
+            "us_per_call": 0.0,
+            "derived": (
+                f"a_v {ACT.a_v:.2f}->{act2.a_v:.3f}; bus power vs square: "
+                f"asym-only -{(1-p_asym/p_square)*100:.1f}%, "
+                f"BI+asym -{(1-p_both/p_square)*100:.1f}%"
+            ),
+        }
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,114 @@
+"""Fig. 4 + Fig. 5 reproduction: per-layer interconnect and total power,
+symmetric vs asymmetric floorplan, for ResNet50 layers L1-L6 + Average.
+
+Two operating modes, both reported:
+  * paper-calibrated: the paper's measured average activities (a_h=0.22,
+    a_v=0.36) with per-layer activity spread from the simulated profiles'
+    relative deviations — reproduces the 9.1% / 2.1% headline exactly;
+  * fully-simulated: activities measured by streaming synthetic quantized
+    activations through the WS-dataflow simulator (no paper constants).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.energy import average_comparison, compare_sym_asym
+from repro.core.floorplan import BusActivity, SystolicArrayGeometry
+from repro.core.switching import combine_profiles
+from repro.core.workloads import RESNET50_TABLE1, profile_conv_layer
+
+GEOM = SystolicArrayGeometry.paper_32x32()
+PAPER_AVG = BusActivity.paper_resnet50()
+
+
+def _simulated_profiles():
+    return [
+        profile_conv_layer(layer, max_tiles=3, max_stream=96, seed=i)
+        for i, layer in enumerate(RESNET50_TABLE1)
+    ]
+
+
+def run() -> list[dict]:
+    t0 = time.time()
+    profiles = _simulated_profiles()
+    profile_us = (time.time() - t0) * 1e6 / len(profiles)
+    avg_sim = combine_profiles(profiles)
+
+    out = []
+
+    # --- paper-calibrated per-layer bars (Fig. 4 / Fig. 5) ------------------
+    # per-layer activities: paper average scaled by each layer's simulated
+    # deviation from the simulated average (ordering information only)
+    comps = []
+    for layer, prof in zip(RESNET50_TABLE1, profiles):
+        act = BusActivity(
+            a_h=min(PAPER_AVG.a_h * prof.a_h / avg_sim.a_h, 1.0),
+            a_v=min(PAPER_AVG.a_v * prof.a_v / avg_sim.a_v, 1.0),
+        )
+        c = compare_sym_asym(GEOM, act, design_act=PAPER_AVG, reference_act=act)
+        comps.append(c)
+        out.append(
+            {
+                "name": f"fig4/interconnect/{layer.name}",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"sym={c.sym.interconnect_w*1e3:.3f}mW "
+                    f"asym={c.asym.interconnect_w*1e3:.3f}mW "
+                    f"saving={c.interconnect_saving*100:.1f}%"
+                ),
+            }
+        )
+    # the paper's 'Average' bars are the equal-activity design point itself
+    c_avg = compare_sym_asym(GEOM, PAPER_AVG)
+    agg = average_comparison(comps + [c_avg])
+    out.append(
+        {
+            "name": "fig4/interconnect/Average",
+            "us_per_call": 0.0,
+            "derived": (
+                f"saving={c_avg.interconnect_saving*100:.2f}% (paper: 9.1%)"
+            ),
+        }
+    )
+    out.append(
+        {
+            "name": "fig5/total/Average",
+            "us_per_call": 0.0,
+            "derived": f"saving={c_avg.total_saving*100:.2f}% (paper: 2.1%)",
+        }
+    )
+    out.append(
+        {
+            "name": "fig4_5/per_layer_average(sim-spread)",
+            "us_per_call": 0.0,
+            "derived": (
+                f"interconnect={agg['interconnect_saving']*100:.2f}% "
+                f"total={agg['total_saving']*100:.2f}%"
+            ),
+        }
+    )
+
+    # --- fully-simulated mode (no paper constants) ---------------------------
+    comps_sim = [
+        compare_sym_asym(GEOM, p.as_bus_activity(), design_act=avg_sim.as_bus_activity())
+        for p in profiles
+    ]
+    agg_sim = average_comparison(comps_sim)
+    out.append(
+        {
+            "name": "fig4_5/fully_simulated",
+            "us_per_call": profile_us,
+            "derived": (
+                f"a_h={avg_sim.a_h:.3f} a_v={avg_sim.a_v:.3f} "
+                f"interconnect={agg_sim['interconnect_saving']*100:.2f}% "
+                f"total={agg_sim['total_saving']*100:.2f}%"
+            ),
+        }
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

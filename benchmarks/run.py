@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure (+ kernel layer).
+
+Prints ``name,us_per_call,derived`` CSV. Exit code 1 if any module fails.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    bench_aspect_sweep,
+    bench_design_space,
+    bench_fig4_fig5_power,
+    bench_kernels,
+    bench_mxu_scale,
+    bench_table1_layers,
+)
+
+MODULES = [
+    ("aspect_sweep", bench_aspect_sweep),
+    ("table1_layers", bench_table1_layers),
+    ("fig4_fig5_power", bench_fig4_fig5_power),
+    ("mxu_scale", bench_mxu_scale),
+    ("design_space", bench_design_space),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = False
+    for name, mod in MODULES:
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']},{derived}")
+        except Exception:
+            failed = True
+            print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

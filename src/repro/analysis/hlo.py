@@ -1,0 +1,97 @@
+"""Post-SPMD HLO analysis: collective-op byte accounting.
+
+``compiled.cost_analysis()`` has no collective information, so the roofline's
+collective term is derived by parsing the optimized (per-device) HLO text and
+summing the result-buffer bytes of every collective op. Counting result
+buffers is the standard approximation (all-gather results count the gathered
+size; all-reduce counts the reduced tensor once — a ring all-reduce moves
+~2x that, which we fold into the link-bandwidth derate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `%name = TYPE op-name(` where TYPE is `bf16[1,2]{...}` or a tuple of those.
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective result bytes, by op kind, from optimized HLO."""
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        bytes_by[op] += _shape_bytes(shape_text)
+        count_by[op] += 1
+    return CollectiveStats(bytes_by_op=dict(bytes_by), count_by_op=dict(count_by))

@@ -1,0 +1,1 @@
+"""Arch configs; see registry.get_arch."""

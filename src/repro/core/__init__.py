@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — asymmetric SA floorplanning + energy model."""
+
+from repro.core.floorplan import (  # noqa: F401
+    BusActivity,
+    SystolicArrayGeometry,
+    accumulator_width,
+    bus_power,
+    bus_power_ratio_vs_square,
+    numeric_optimal_aspect,
+    optimal_aspect_power,
+    optimal_aspect_wirelength,
+    wirelength_total,
+)
+from repro.core.energy import (  # noqa: F401
+    EnergyModelConfig,
+    compare_sym_asym,
+    power_breakdown,
+)
+from repro.core.switching import (  # noqa: F401
+    ActivityProfile,
+    profile_ws_gemm,
+    stream_toggle_rate,
+)
+from repro.core.systolic import schedule_gemm, ws_matmul_reference  # noqa: F401

@@ -1,0 +1,272 @@
+"""Analytical floorplan model for weight-stationary systolic arrays.
+
+Implements the paper's core contribution (Peltekis et al., "The Case for
+Asymmetric Systolic Array Floorplanning", 2023):
+
+  * Eq. 1-3: total horizontal/vertical bus wirelength of an R x C array of
+    PEs with a fixed per-PE area ``A = H * W``.
+  * Eq. 5:   wirelength-optimal PE aspect ratio ``W/H = B_v / B_h``.
+  * Eq. 6:   power-optimal PE aspect ratio   ``W/H = (B_v a_v) / (B_h a_h)``.
+
+All lengths are in micrometers, areas in um^2, powers in watts unless noted.
+The model is closed-form; a numeric golden-section optimizer is provided so
+property tests can cross-check the closed form against brute-force search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+__all__ = [
+    "SystolicArrayGeometry",
+    "BusActivity",
+    "pe_dims_from_aspect",
+    "wirelength_h",
+    "wirelength_v",
+    "wirelength_total",
+    "optimal_aspect_wirelength",
+    "optimal_aspect_power",
+    "bus_switched_capacitance_per_cycle",
+    "bus_power",
+    "bus_power_ratio_vs_square",
+    "golden_section_minimize",
+    "numeric_optimal_aspect",
+    "accumulator_width",
+]
+
+
+def accumulator_width(input_bits: int, rows: int) -> int:
+    """Bit width needed to accumulate ``rows`` products of two ``input_bits`` ints.
+
+    A product of two signed B-bit integers needs 2B bits; adding R of them
+    grows the dynamic range by ceil(log2 R) bits.  The paper's operating point
+    (B=16, R=32) yields 32 + ceil(log2 32) = 37 bits, matching Section IV.
+    """
+    if input_bits <= 0 or rows <= 0:
+        raise ValueError("input_bits and rows must be positive")
+    return 2 * input_bits + math.ceil(math.log2(rows))
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicArrayGeometry:
+    """Static geometry of an R x C weight-stationary systolic array.
+
+    Attributes:
+      rows / cols:  PE grid dimensions (R, C in the paper).
+      b_h:          horizontal (input) bus width in bits, per row.
+      b_v:          vertical (partial-sum) bus width in bits, per column.
+      pe_area_um2:  fixed per-PE area A; H * W == A for any aspect ratio.
+    """
+
+    rows: int
+    cols: int
+    b_h: int
+    b_v: int
+    pe_area_um2: float = 1200.0  # 16-bit MAC + pipeline regs @ 28nm (typical)
+
+    def __post_init__(self) -> None:
+        if self.rows <= 0 or self.cols <= 0:
+            raise ValueError("rows/cols must be positive")
+        if self.b_h <= 0 or self.b_v <= 0:
+            raise ValueError("bus widths must be positive")
+        if self.pe_area_um2 <= 0:
+            raise ValueError("pe_area_um2 must be positive")
+
+    @classmethod
+    def paper_32x32(cls) -> "SystolicArrayGeometry":
+        """The paper's experimental configuration: 32x32, int16, 37-bit sums."""
+        return cls(rows=32, cols=32, b_h=16, b_v=accumulator_width(16, 32))
+
+
+@dataclasses.dataclass(frozen=True)
+class BusActivity:
+    """Average switching activity (toggles per bit per cycle) per direction."""
+
+    a_h: float
+    a_v: float
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.a_h <= 1.0 and 0.0 <= self.a_v <= 1.0):
+            raise ValueError("activities must lie in [0, 1]")
+
+    @classmethod
+    def paper_resnet50(cls) -> "BusActivity":
+        """Activities measured by the paper on ResNet50/ImageNet (Section IV)."""
+        return cls(a_h=0.22, a_v=0.36)
+
+
+def pe_dims_from_aspect(geom: SystolicArrayGeometry, aspect: float) -> tuple[float, float]:
+    """Return (W, H) in um for a PE of area A with aspect ratio ``W/H = aspect``."""
+    if aspect <= 0:
+        raise ValueError("aspect ratio must be positive")
+    h = math.sqrt(geom.pe_area_um2 / aspect)
+    w = geom.pe_area_um2 / h
+    return w, h
+
+
+def wirelength_h(geom: SystolicArrayGeometry, aspect: float) -> float:
+    """Eq. 1: WL_h = R * C * (W * B_h)  [um of wire]."""
+    w, _ = pe_dims_from_aspect(geom, aspect)
+    return geom.rows * geom.cols * w * geom.b_h
+
+
+def wirelength_v(geom: SystolicArrayGeometry, aspect: float) -> float:
+    """Eq. 2: WL_v = R * C * (H * B_v)  [um of wire]."""
+    _, h = pe_dims_from_aspect(geom, aspect)
+    return geom.rows * geom.cols * h * geom.b_v
+
+
+def wirelength_total(geom: SystolicArrayGeometry, aspect: float) -> float:
+    """Eq. 3/4: WL = R*C*(W*B_h + H*B_v)."""
+    return wirelength_h(geom, aspect) + wirelength_v(geom, aspect)
+
+
+def optimal_aspect_wirelength(geom: SystolicArrayGeometry) -> float:
+    """Eq. 5: the wirelength-optimal aspect ratio W/H = B_v / B_h."""
+    return geom.b_v / geom.b_h
+
+
+def optimal_aspect_power(geom: SystolicArrayGeometry, act: BusActivity) -> float:
+    """Eq. 6: the power-optimal aspect ratio W/H = (B_v a_v) / (B_h a_h).
+
+    Falls back to the wirelength optimum when either activity is zero (a
+    direction with no toggling contributes no dynamic power, so only the
+    toggling direction's wirelength matters; the limit of Eq. 6 is then
+    unbounded — we clamp to the pure-wirelength optimum scaled by the active
+    direction, which is the paper's Eq. 5 behavior for a_h == a_v).
+    """
+    if act.a_h == 0.0 and act.a_v == 0.0:
+        return optimal_aspect_wirelength(geom)
+    if act.a_h == 0.0 or act.a_v == 0.0:
+        # Degenerate: one direction never toggles. Dynamic bus power is then
+        # monotonic in the other direction's span; physical floorplans bound
+        # the aspect ratio, so clamp to a practical envelope.
+        return _ASPECT_MAX if act.a_h == 0.0 else _ASPECT_MIN
+    return (geom.b_v * act.a_v) / (geom.b_h * act.a_h)
+
+
+# Practical envelope for physically realizable standard-cell placements.
+_ASPECT_MIN = 1.0 / 16.0
+_ASPECT_MAX = 16.0
+
+
+def bus_switched_capacitance_per_cycle(
+    geom: SystolicArrayGeometry,
+    act: BusActivity,
+    aspect: float,
+    wire_cap_f_per_um: float = 0.20e-15,
+) -> float:
+    """Average switched wire capacitance per cycle [F].
+
+    C_sw = a_h * WL_h * c_wire + a_v * WL_v * c_wire.  This is the quantity the
+    aspect ratio actually optimizes; power is 1/2 * C_sw * V^2 * f.
+    """
+    return wire_cap_f_per_um * (
+        act.a_h * wirelength_h(geom, aspect) + act.a_v * wirelength_v(geom, aspect)
+    )
+
+
+def bus_power(
+    geom: SystolicArrayGeometry,
+    act: BusActivity,
+    aspect: float,
+    vdd: float = 0.9,
+    freq_hz: float = 1.0e9,
+    wire_cap_f_per_um: float = 0.20e-15,
+) -> float:
+    """Dynamic power dissipated on the H/V data buses [W] at a given aspect."""
+    c_sw = bus_switched_capacitance_per_cycle(geom, act, aspect, wire_cap_f_per_um)
+    return 0.5 * c_sw * vdd * vdd * freq_hz
+
+
+def bus_power_ratio_vs_square(geom: SystolicArrayGeometry, act: BusActivity) -> float:
+    """P_bus(optimal aspect) / P_bus(square).
+
+    Closed form: with x = B_h a_h, y = B_v a_v, the square layout dissipates
+    ∝ (x + y) while the optimal rectangle dissipates ∝ 2 sqrt(x y); the ratio
+    is the AM-GM gap 2 sqrt(xy)/(x+y) ≤ 1 (equality iff x == y, i.e. the array
+    is already balanced and square IS optimal).
+    """
+    x = geom.b_h * act.a_h
+    y = geom.b_v * act.a_v
+    if x == 0.0 and y == 0.0:
+        return 1.0
+    if x == 0.0 or y == 0.0:
+        # Unbounded improvement in theory; report the envelope-clamped ratio.
+        opt = optimal_aspect_power(geom, act)
+        return bus_power(geom, act, opt) / bus_power(geom, act, 1.0)
+    return 2.0 * math.sqrt(x * y) / (x + y)
+
+
+def golden_section_minimize(
+    fn: Callable[[float], float],
+    lo: float,
+    hi: float,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+) -> float:
+    """Golden-section search for the minimizer of a unimodal ``fn`` on [lo, hi]."""
+    if not (lo < hi):
+        raise ValueError("need lo < hi")
+    invphi = (math.sqrt(5.0) - 1.0) / 2.0
+    a, b = lo, hi
+    c = b - invphi * (b - a)
+    d = a + invphi * (b - a)
+    fc, fd = fn(c), fn(d)
+    for _ in range(max_iter):
+        if abs(b - a) < tol * (abs(a) + abs(b) + 1e-30):
+            break
+        if fc < fd:
+            b, d, fd = d, c, fc
+            c = b - invphi * (b - a)
+            fc = fn(c)
+        else:
+            a, c, fc = c, d, fd
+            d = a + invphi * (b - a)
+            fd = fn(d)
+    return 0.5 * (a + b)
+
+
+def numeric_optimal_aspect(
+    geom: SystolicArrayGeometry,
+    act: BusActivity,
+    lo: float = 1.0 / 64.0,
+    hi: float = 64.0,
+) -> float:
+    """Brute-force (golden-section, in log-space) power-optimal aspect ratio.
+
+    Used by property tests to validate the closed-form Eq. 6. The objective
+    P(aspect) = k1 * sqrt(aspect) + k2 / sqrt(aspect) is unimodal in
+    log(aspect), so golden-section search is exact up to tolerance.
+    """
+
+    def objective(log_aspect: float) -> float:
+        return bus_power(geom, act, math.exp(log_aspect))
+
+    log_opt = golden_section_minimize(objective, math.log(lo), math.log(hi))
+    return math.exp(log_opt)
+
+
+def sweep_aspects(
+    geom: SystolicArrayGeometry,
+    act: BusActivity,
+    aspects: Sequence[float],
+) -> list[dict[str, float]]:
+    """Evaluate wirelength and bus power across a sweep of aspect ratios."""
+    rows = []
+    for ar in aspects:
+        w, h = pe_dims_from_aspect(geom, ar)
+        rows.append(
+            {
+                "aspect": ar,
+                "pe_w_um": w,
+                "pe_h_um": h,
+                "wl_h_um": wirelength_h(geom, ar),
+                "wl_v_um": wirelength_v(geom, ar),
+                "wl_total_um": wirelength_total(geom, ar),
+                "bus_power_w": bus_power(geom, act, ar),
+            }
+        )
+    return rows

@@ -1,0 +1,238 @@
+"""Bit-level switching-activity profiling of weight-stationary SA data streams.
+
+The paper's Eq. 6 needs the *average switching activity per bit* of
+
+  * the horizontal input buses (a_h): the sequence of input operands A[t, r]
+    streamed into each row r of the array, and
+  * the vertical partial-sum buses (a_v): the sequence of partial sums
+    S[t, r, c] = sum_{r' <= r} A[t, r'] * W[r', c] flowing South out of each
+    PE (r, c).
+
+Toggle statistics between *consecutive values on the same wire* are invariant
+to the systolic pipeline skew (skew delays whole sequences; it does not
+reorder them), so we profile the unskewed streams directly.
+
+Partial sums need up to ``2*B + ceil(log2 R)`` bits (37 for the paper's
+config), so this module carries them as int64 and counts toggles on the
+two's-complement representation truncated to the bus width.
+
+numpy is used for the host-side oracle (exact int64 bit manipulation); the
+TPU-accelerated path lives in ``repro.kernels.toggle_count`` and is verified
+against this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "popcount",
+    "toggles_between",
+    "stream_toggle_rate",
+    "horizontal_stream",
+    "vertical_partial_sums",
+    "ActivityProfile",
+    "profile_ws_tile",
+    "profile_ws_gemm",
+]
+
+_M1 = np.uint64(0x5555555555555555)
+_M2 = np.uint64(0x3333333333333333)
+_M4 = np.uint64(0x0F0F0F0F0F0F0F0F)
+_H01 = np.uint64(0x0101010101010101)
+
+
+def popcount(x: np.ndarray) -> np.ndarray:
+    """Vectorized 64-bit population count (Hamming weight).
+
+    Classic SWAR bit-twiddling; exact for any uint64 input.
+    """
+    x = np.asarray(x, dtype=np.uint64)
+    x = x - ((x >> np.uint64(1)) & _M1)
+    x = (x & _M2) + ((x >> np.uint64(2)) & _M2)
+    x = (x + (x >> np.uint64(4))) & _M4
+    return ((x * _H01) >> np.uint64(56)).astype(np.int64)
+
+
+def _to_bus_repr(values: np.ndarray, bits: int) -> np.ndarray:
+    """Two's-complement representation of ``values`` on a ``bits``-wide bus."""
+    if not 1 <= bits <= 64:
+        raise ValueError("bus width must be in [1, 64]")
+    v = np.asarray(values).astype(np.int64)
+    if bits == 64:
+        return v.view(np.uint64)
+    mask = np.uint64((1 << bits) - 1)
+    return v.view(np.uint64) & mask
+
+
+def toggles_between(a: np.ndarray, b: np.ndarray, bits: int) -> np.ndarray:
+    """Number of bit flips when a ``bits``-wide bus goes from value a to b."""
+    ua = _to_bus_repr(a, bits)
+    ub = _to_bus_repr(b, bits)
+    return popcount(ua ^ ub)
+
+
+def stream_toggle_rate(stream: np.ndarray, bits: int, axis: int = 0) -> float:
+    """Average toggles per bit per transition along ``axis`` of a value stream.
+
+    For a stream of T values on one wire bundle, there are T-1 transitions;
+    the rate is  mean_t popcount(x_t XOR x_{t+1}) / bits, averaged over every
+    other axis (i.e. over all wires in the bundle).
+    """
+    s = np.asarray(stream)
+    if s.shape[axis] < 2:
+        return 0.0
+    cur = np.take(s, range(0, s.shape[axis] - 1), axis=axis)
+    nxt = np.take(s, range(1, s.shape[axis]), axis=axis)
+    return float(np.mean(toggles_between(cur, nxt, bits))) / float(bits)
+
+
+def horizontal_stream(a_tile: np.ndarray) -> np.ndarray:
+    """The per-row horizontal bus streams for one WS tile.
+
+    ``a_tile`` has shape (T, R): T time steps (one output row of the GEMM per
+    step, in steady state) of R input operands. Row r's horizontal bus sees
+    the sequence a_tile[:, r]. Returned unchanged (shape (T, R)); the stream
+    axis is axis 0.
+    """
+    a = np.asarray(a_tile)
+    if a.ndim != 2:
+        raise ValueError("a_tile must be (T, R)")
+    return a
+
+
+def vertical_partial_sums(a_tile: np.ndarray, w_tile: np.ndarray) -> np.ndarray:
+    """Partial-sum sequences on every vertical bus segment of one WS tile.
+
+    Under weight-stationary dataflow, PE (r, c) emits
+    S[t, r, c] = sum_{r' <= r} a_tile[t, r'] * w_tile[r', c] on its South bus.
+    Shape: (T, R, C), int64 (exact for bus widths <= 63 bits).
+    """
+    a = np.asarray(a_tile, dtype=np.int64)
+    w = np.asarray(w_tile, dtype=np.int64)
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} x {w.shape}")
+    # products[t, r, c] then prefix-sum down the rows (the reduction axis).
+    products = a[:, :, None] * w[None, :, :]
+    return np.cumsum(products, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivityProfile:
+    """Measured switching activities + supporting statistics for one workload."""
+
+    a_h: float
+    a_v: float
+    b_h: int
+    b_v: int
+    h_transitions: int
+    v_transitions: int
+    input_zero_fraction: float
+
+    def as_bus_activity(self):
+        from repro.core.floorplan import BusActivity
+
+        return BusActivity(a_h=self.a_h, a_v=self.a_v)
+
+
+def profile_ws_tile(
+    a_tile: np.ndarray,
+    w_tile: np.ndarray,
+    b_h: int,
+    b_v: int,
+) -> tuple[float, float, int, int]:
+    """(a_h, a_v, #h transitions, #v transitions) for one R x C WS tile."""
+    h = horizontal_stream(a_tile)
+    v = vertical_partial_sums(a_tile, w_tile)
+    t = a_tile.shape[0]
+    a_h = stream_toggle_rate(h, b_h, axis=0)
+    a_v = stream_toggle_rate(v, b_v, axis=0)
+    h_trans = max(t - 1, 0) * h.shape[1]
+    v_trans = max(t - 1, 0) * v.shape[1] * v.shape[2]
+    return a_h, a_v, h_trans, v_trans
+
+
+def profile_ws_gemm(
+    a: np.ndarray,
+    w: np.ndarray,
+    rows: int,
+    cols: int,
+    b_h: int,
+    b_v: int,
+    max_tiles: int | None = 16,
+    max_stream: int | None = 1024,
+    seed: int = 0,
+) -> ActivityProfile:
+    """Profile the full GEMM ``a @ w`` tiled onto an R x C WS systolic array.
+
+    The GEMM (M, K) x (K, N) is tiled into ceil(K/rows) * ceil(N/cols) weight
+    tiles; each tile streams all M input rows. For tractability the profiler
+    subsamples ``max_tiles`` tiles and ``max_stream`` consecutive stream steps
+    per tile (consecutive — toggle statistics need adjacency), then averages
+    activities weighted by transition counts.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
+    m, k = a.shape
+    _, n = w.shape
+    rng = np.random.default_rng(seed)
+
+    k_tiles = -(-k // rows)
+    n_tiles = -(-n // cols)
+    tile_ids = [(kt, nt) for kt in range(k_tiles) for nt in range(n_tiles)]
+    if max_tiles is not None and len(tile_ids) > max_tiles:
+        idx = rng.choice(len(tile_ids), size=max_tiles, replace=False)
+        tile_ids = [tile_ids[i] for i in sorted(idx)]
+
+    h_num = v_num = 0.0
+    h_den = v_den = 0
+    for kt, nt in tile_ids:
+        k0, k1 = kt * rows, min((kt + 1) * rows, k)
+        n0, n1 = nt * cols, min((nt + 1) * cols, n)
+        a_tile = a[:, k0:k1]
+        w_tile = w[k0:k1, n0:n1]
+        if max_stream is not None and m > max_stream:
+            start = int(rng.integers(0, m - max_stream + 1))
+            a_tile = a_tile[start : start + max_stream]
+        ah, av, ht, vt = profile_ws_tile(a_tile, w_tile, b_h, b_v)
+        h_num += ah * ht
+        v_num += av * vt
+        h_den += ht
+        v_den += vt
+
+    return ActivityProfile(
+        a_h=h_num / h_den if h_den else 0.0,
+        a_v=v_num / v_den if v_den else 0.0,
+        b_h=b_h,
+        b_v=b_v,
+        h_transitions=h_den,
+        v_transitions=v_den,
+        input_zero_fraction=float(np.mean(a == 0)),
+    )
+
+
+def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
+    """Transition-count-weighted average of several per-layer profiles."""
+    profiles = list(profiles)
+    if not profiles:
+        raise ValueError("no profiles to combine")
+    b_h, b_v = profiles[0].b_h, profiles[0].b_v
+    h_den = sum(p.h_transitions for p in profiles)
+    v_den = sum(p.v_transitions for p in profiles)
+    a_h = sum(p.a_h * p.h_transitions for p in profiles) / max(h_den, 1)
+    a_v = sum(p.a_v * p.v_transitions for p in profiles) / max(v_den, 1)
+    zf = float(np.mean([p.input_zero_fraction for p in profiles]))
+    return ActivityProfile(
+        a_h=a_h,
+        a_v=a_v,
+        b_h=b_h,
+        b_v=b_v,
+        h_transitions=h_den,
+        v_transitions=v_den,
+        input_zero_fraction=zf,
+    )

@@ -1,0 +1,1 @@
+"""Pallas kernels (TPU target, interpret-validated)."""

@@ -1,0 +1,69 @@
+"""Jitted public API for fused attention: GQA expansion + seq padding."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused attention over (B, H, S, D) queries with (B, KV, S, D) keys/values.
+
+    KV heads are repeated to match H (GQA); sequence is zero-padded to a block
+    multiple (padded keys sit above the causal diagonal for padded queries
+    only, and padded query rows are sliced away).
+    """
+    b, h, s, d = q.shape
+    _, kv, _, _ = k.shape
+    if h % kv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kv}")
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    block = max(block_q, block_k)
+    pad = (-s) % block
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    sp = s + pad
+
+    q3 = q.reshape(b * h, sp, d)
+    k3 = k.reshape(b * h, sp, d)
+    v3 = v.reshape(b * h, sp, d)
+    # Padding note: with causal=True padded kv positions are only visible to
+    # padded query rows, which are sliced off below. For non-causal use the
+    # caller must pass an exact block-multiple seq (asserted in the kernel).
+    if not causal and pad:
+        raise ValueError("non-causal flash attention requires block-multiple seq")
+    out = flash_attention_pallas(
+        q3,
+        k3,
+        v3,
+        causal=causal,
+        window=window,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, sp, d)[:, :, :s, :]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Dense masked softmax attention. q, k, v: (BH, S, D)."""
+    bh, s, d = q.shape
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    q_ids = jnp.arange(s)[:, None]
+    k_ids = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask = mask & (q_ids >= k_ids)
+    if window is not None:
+        mask = mask & (q_ids - k_ids < window)
+    logits = jnp.where(mask[None], logits, -1.0e30)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = jnp.where(mask[None], probs, 0.0)
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = probs / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""toggle_count kernel package."""
+from repro.kernels.toggle_count.ops import *  # noqa: F401,F403

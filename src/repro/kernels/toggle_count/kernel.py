@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: bit-toggle counting over int32 value streams.
+
+The switching-activity profiler's hot loop is popcount(x[t] XOR x[t+1])
+summed over an entire activation/partial-sum stream. On TPU this is a pure
+VPU workload: int32 XOR + SWAR popcount over (8, 128)-aligned VMEM tiles.
+
+The wrapper (ops.py) passes the stream twice — ``x[:-1]`` and ``x[1:]`` — so
+each grid cell sees aligned (cur, nxt) blocks and no cross-block halo is
+needed. Each grid cell writes one partial sum; the wrapper reduces them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_L = 128
+
+
+def _popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount for uint32 lanes (no popc instruction needed on the VPU)."""
+    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+
+
+def _toggle_kernel(cur_ref, nxt_ref, out_ref):
+    x = cur_ref[...].astype(jnp.uint32)
+    y = nxt_ref[...].astype(jnp.uint32)
+    cnt = _popcount_u32(x ^ y).astype(jnp.int32)
+    out_ref[0, 0] = jnp.sum(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_l", "interpret"))
+def toggle_count_pallas(
+    cur: jnp.ndarray,
+    nxt: jnp.ndarray,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Total bit toggles between aligned int32 arrays ``cur`` and ``nxt``.
+
+    Both inputs are (T, L) int32; T and L are padded to block multiples by the
+    caller (ops.py) with identical padding values so padding contributes zero
+    toggles. Returns a scalar int64-safe int32 count per (T//bt, L//bl) grid
+    cell, summed here to a scalar int64.
+    """
+    if cur.shape != nxt.shape or cur.ndim != 2:
+        raise ValueError(f"cur/nxt must be equal-shape rank-2, got {cur.shape} {nxt.shape}")
+    t, l = cur.shape
+    if t % block_t or l % block_l:
+        raise ValueError(f"shape {(t, l)} not padded to block {(block_t, block_l)}")
+    grid = (t // block_t, l // block_l)
+    # Per-block partials: a (block_t, block_l) int32 block toggles at most
+    # bt*bl*32 = 2^20-ish bits — far below int32 overflow. The cross-block
+    # reduction is done by the caller in int64 (host-side numpy; jnp int64
+    # needs the global x64 flag which this library never sets).
+    return pl.pallas_call(
+        _toggle_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_l), lambda i, j: (i, j)),
+            pl.BlockSpec((block_t, block_l), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
+        interpret=interpret,
+    )(cur, nxt)

@@ -1,0 +1,98 @@
+"""Jitted public API for stream toggle counting (switching-activity profiling).
+
+Handles padding to TPU-friendly block multiples, int64 streams (split into
+hi/lo int32 planes — exact for bus widths up to 64 bits), and converts raw
+toggle counts to per-bit switching activities compatible with
+``repro.core.switching``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.toggle_count.kernel import (
+    DEFAULT_BLOCK_L,
+    DEFAULT_BLOCK_T,
+    toggle_count_pallas,
+)
+
+
+def _pad_to_blocks(x: jnp.ndarray, bt: int, bl: int) -> jnp.ndarray:
+    t, l = x.shape
+    pt = (-t) % bt
+    pll = (-l) % bl
+    if pt or pll:
+        # zero-pad BOTH cur and nxt: padded lanes see 0 XOR 0 = no toggles
+        x = jnp.pad(x, ((0, pt), (0, pll)))
+    return x
+
+
+def stream_toggle_count(
+    stream: jnp.ndarray,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = False,
+) -> int:
+    """Total bit flips along axis 0 of an int32 (T, L) stream, via Pallas.
+
+    The per-block partial sums come back as int32 (safe: <= bt*bl*32 per
+    block); the cross-block reduction happens here in numpy int64 so totals
+    never overflow regardless of stream size.
+    """
+    if stream.ndim == 1:
+        stream = stream[:, None]
+    if stream.shape[0] < 2:
+        return 0
+    cur = _pad_to_blocks(stream[:-1].astype(jnp.int32), block_t, block_l)
+    nxt = _pad_to_blocks(stream[1:].astype(jnp.int32), block_t, block_l)
+    partials = toggle_count_pallas(
+        cur, nxt, block_t=block_t, block_l=block_l, interpret=interpret
+    )
+    return int(np.asarray(partials).astype(np.int64).sum())
+
+
+def stream_toggle_count_i64(
+    stream_np: np.ndarray,
+    *,
+    interpret: bool = False,
+) -> int:
+    """Toggle count for an int64-valued stream (e.g. 37-bit partial sums).
+
+    Splits each value into lo/hi uint32 planes; popcount(a XOR b) over 64 bits
+    equals the sum of the 32-bit plane popcounts, so this is exact.
+    """
+    s = np.asarray(stream_np)
+    if s.ndim == 1:
+        s = s[:, None]
+    u = s.astype(np.int64).view(np.uint64)
+    lo = (u & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    hi = (u >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    total = stream_toggle_count(jnp.asarray(lo), interpret=interpret)
+    total += stream_toggle_count(jnp.asarray(hi), interpret=interpret)
+    return total
+
+
+def stream_activity(
+    stream_np: np.ndarray,
+    bits: int,
+    *,
+    interpret: bool = False,
+) -> float:
+    """Per-bit, per-transition switching activity of a (T, L) value stream.
+
+    Values are first truncated to the ``bits``-wide two's-complement bus
+    representation (matching ``repro.core.switching.stream_toggle_rate``).
+    """
+    s = np.asarray(stream_np).astype(np.int64)
+    if s.ndim == 1:
+        s = s[:, None]
+    if s.shape[0] < 2:
+        return 0.0
+    if bits < 64:
+        mask = np.int64((1 << bits) - 1)
+        s = s & mask
+    toggles = stream_toggle_count_i64(s, interpret=interpret)
+    transitions = (s.shape[0] - 1) * s.shape[1]
+    return toggles / (transitions * bits)

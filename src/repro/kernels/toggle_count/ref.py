@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the toggle_count kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def popcount_u32_ref(v: jnp.ndarray) -> jnp.ndarray:
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+
+
+def toggle_count_ref(cur: jnp.ndarray, nxt: jnp.ndarray) -> jnp.ndarray:
+    """Total bit flips between aligned int32 arrays.
+
+    Summed in int32 (jnp int64 needs the global x64 flag): exact for streams
+    up to 2^31 total toggles = 64M+ int32 values, far beyond oracle sizes;
+    the production path (ops.stream_toggle_count) reduces in numpy int64.
+    """
+    x = cur.astype(jnp.uint32) ^ nxt.astype(jnp.uint32)
+    return jnp.sum(popcount_u32_ref(x).astype(jnp.int32))
+
+
+def stream_toggle_count_ref(stream: jnp.ndarray) -> jnp.ndarray:
+    """Total bit flips along axis 0 of an int32 value stream (T, L)."""
+    return toggle_count_ref(stream[:-1], stream[1:])

@@ -1,0 +1,2 @@
+"""ws_matmul kernel package."""
+from repro.kernels.ws_matmul.ops import *  # noqa: F401,F403

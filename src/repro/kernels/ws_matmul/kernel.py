@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: weight-stationary tiled matmul (the SA compute pattern).
+
+This is the TPU-native expression of the paper's workload: an R x C
+weight-stationary systolic GEMM. The MXU *is* a 128x128 systolic array, so the
+kernel tiles (M, K) x (K, N) into MXU-aligned VMEM blocks with K innermost —
+exactly the WS schedule (weights of one (bk, bn) tile stay resident while the
+input stream flows through), accumulating into a VMEM scratch accumulator at
+the wide "vertical-bus" precision (int32 for int8/int16 inputs, f32 for bf16),
+mirroring the B_v > B_h asymmetry the paper optimizes.
+
+Supports: int8/int16 -> int32 (quantized inference) and bf16/f32 -> f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _acc_dtype(dtype: jnp.dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _ws_matmul_kernel(a_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid is (nm, nn, nk) with K innermost."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    w = w_ref[...]
+    acc = acc_ref[...]
+    prec = _acc_dtype(a.dtype)
+    # The MXU consumes the narrow operands and accumulates wide — the
+    # hardware analogue of B_h-wide H buses feeding B_v-wide V buses.
+    acc_ref[...] = acc + jnp.dot(
+        a.astype(prec) if prec == jnp.int32 else a,
+        w.astype(prec) if prec == jnp.int32 else w,
+        preferred_element_type=prec,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def ws_matmul_pallas(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Weight-stationary tiled ``a @ w``; dims must be block multiples.
+
+    (Use ops.ws_matmul for automatic padding of arbitrary shapes.)
+    """
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} x {w.shape}")
+    m, k = a.shape
+    _, n = w.shape
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"{(m, k, n)} not multiples of {(block_m, block_k, block_n)}")
+    n_k = k // block_k
+    out_dtype = _acc_dtype(a.dtype)
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_ws_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), out_dtype)],
+        interpret=interpret,
+    )(a, w)

@@ -1,0 +1,40 @@
+"""Jitted public API for the weight-stationary Pallas GEMM (auto-padding)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ws_matmul.kernel import ws_matmul_pallas
+
+
+def _pad_dim(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def ws_matmul(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``a @ w`` on the weight-stationary Pallas kernel, any 2-D shapes.
+
+    Zero-pads every dim to its block multiple (zeros contribute nothing to the
+    accumulation) and slices the result back.
+    """
+    m, _ = a.shape
+    _, n = w.shape
+    a_p = _pad_dim(_pad_dim(a, 0, block_m), 1, block_k)
+    w_p = _pad_dim(_pad_dim(w, 0, block_k), 1, block_n)
+    out = ws_matmul_pallas(
+        a_p, w_p, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return out[:m, :n]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ws_matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ws_matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul at the kernel's accumulation precision."""
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return jnp.dot(
+            a.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+    return jnp.dot(a, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,1 @@
+"""Launchers: mesh, specs, steps, dryrun, train, serve."""

@@ -1,0 +1,80 @@
+"""Serving driver: batched prefill + decode with the KV/state cache.
+
+CPU-runnable example (reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b --reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.models import model
+
+
+def generate(cfg, params, prompt_tokens, gen_len: int, cache_len: int | None = None):
+    """Prefill the prompt (filling the cache), then greedy-decode gen_len."""
+    b, s = prompt_tokens.shape[0], prompt_tokens.shape[1]
+    total = s + gen_len
+    logits_last, cache = model.prefill_with_cache(
+        cfg, params, prompt_tokens, cache_seq_len=cache_len or total
+    )
+    decode = jax.jit(
+        lambda p, c, t, pos: model.decode_step(cfg, p, c, t, pos), donate_argnums=1
+    )
+    toks = []
+    if cfg.num_codebooks > 1:
+        nxt = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None, :]
+    else:
+        nxt = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
+    for i in range(gen_len):
+        toks.append(nxt)
+        logits, cache = decode(params, cache, nxt, jnp.int32(s + i))
+        if cfg.num_codebooks > 1:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None, :]
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(toks, axis=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params, _ = model.init_params(cfg, key)
+    shape = (
+        (args.batch, args.prompt_len, cfg.num_codebooks)
+        if cfg.num_codebooks > 1
+        else (args.batch, args.prompt_len)
+    )
+    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size, dtype=jnp.int32)
+
+    t0 = time.time()
+    out = generate(cfg, params, prompt, args.gen)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": args.arch,
+        "generated_shape": list(out.shape),
+        "tokens_per_s": round(args.batch * args.gen / dt, 2),
+        "finite": bool(jnp.all(out >= 0)),
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,90 @@
+"""Training driver: end-to-end fault-tolerant training on any arch config.
+
+CPU-runnable example (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch yi_6b --reduced \\
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+On a real cluster this same driver runs per-host under the production mesh
+(--mesh data,model), with the coordinator handling checkpoints, preemption
+and elastic restarts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_arch
+from repro.data.pipeline import DataConfig
+from repro.launch.steps import make_train_step
+from repro.models import model
+from repro.optim import adamw
+from repro.optim.schedule import linear_warmup_cosine
+from repro.runtime.coordinator import CoordinatorConfig, TrainingCoordinator
+
+
+def build(arch: str, reduced: bool, batch: int, seq: int, steps: int, ckpt_dir: str,
+          lr: float = 3e-4, seed: int = 0):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    opt_cfg = adamw.AdamWConfig(lr=lr, schedule=linear_warmup_cosine(10, steps))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=0)
+
+    def init_state():
+        params, _ = model.init_params(cfg, jax.random.PRNGKey(seed))
+        return {"params": params, "opt_state": adamw.init_state(opt_cfg, params)}
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=seq,
+        global_batch=batch,
+        num_codebooks=cfg.num_codebooks,
+        seed=seed,
+    )
+    coord = TrainingCoordinator(
+        train_step=step_fn,
+        init_state=init_state,
+        data_cfg=data_cfg,
+        ckpt=CheckpointManager(ckpt_dir, keep=3),
+        cfg=CoordinatorConfig(checkpoint_every=max(steps // 4, 1), max_steps=steps),
+    )
+    return coord
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--fail-at", type=int, default=None, help="inject crash (test)")
+    args = ap.parse_args()
+
+    coord = build(
+        args.arch, args.reduced, args.batch, args.seq, args.steps, args.ckpt_dir,
+        lr=args.lr,
+    )
+    coord.install_preemption_handler()
+    step, _ = coord.run(steps=args.steps, fail_at_step=args.fail_at)
+    first, last = coord.metrics_log[0], coord.metrics_log[-1]
+    print(json.dumps({
+        "arch": args.arch,
+        "steps_run": len(coord.metrics_log),
+        "final_step": step,
+        "loss_first": first["loss"],
+        "loss_last": last["loss"],
+        "improved": last["loss"] < first["loss"],
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,293 @@
+"""Shared model layers: norms, rotary embeddings, chunked attention math.
+
+Everything is pure-functional: params are pytrees of jnp arrays; a parallel
+pytree of logical-axis tuples (see ``repro.parallel.sharding``) is built at
+init time by the same functions, so sharding rules never have to pattern-match
+parameter names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Axes = dict
+
+_NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization helpers (stacked over a leading 'layers' axis).
+# ---------------------------------------------------------------------------
+
+
+def dense_param(
+    key: jax.Array,
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    *,
+    stack: int | None = None,
+    scale: float | None = None,
+    dtype: jnp.dtype = jnp.float32,
+) -> tuple[jnp.ndarray, tuple[str | None, ...]]:
+    """Fan-in-scaled normal param; optionally stacked over a 'layers' axis."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    full_shape = (stack, *shape) if stack is not None else shape
+    full_axes = ("layers", *axes) if stack is not None else axes
+    return std * jax.random.normal(key, full_shape, dtype=dtype), full_axes
+
+
+def ones_param(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    *,
+    stack: int | None = None,
+    dtype: jnp.dtype = jnp.float32,
+) -> tuple[jnp.ndarray, tuple[str | None, ...]]:
+    full_shape = (stack, *shape) if stack is not None else shape
+    full_axes = ("layers", *axes) if stack is not None else axes
+    return jnp.ones(full_shape, dtype=dtype), full_axes
+
+
+def zeros_param(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    *,
+    stack: int | None = None,
+    dtype: jnp.dtype = jnp.float32,
+) -> tuple[jnp.ndarray, tuple[str | None, ...]]:
+    full_shape = (stack, *shape) if stack is not None else shape
+    full_axes = ("layers", *axes) if stack is not None else axes
+    return jnp.zeros(full_shape, dtype=dtype), full_axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(
+    positions: jnp.ndarray,  # (..., S) int32
+    head_dim: int,
+    theta: float = 10000.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables (..., S, head_dim/2) for the given positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, H, S, D)
+    cos: jnp.ndarray,  # (B, S, D/2)
+    sin: jnp.ndarray,
+) -> jnp.ndarray:
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, None, :, :]
+    s = sin[:, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(
+    positions: jnp.ndarray,  # (3, B, S) int32 — temporal / height / width streams
+    head_dim: int,
+    sections: tuple[int, int, int],
+    theta: float = 10000.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL multimodal RoPE: head_dim/2 rotary freqs split into 3 sections,
+    each driven by its own position stream. Returns (B, S, D/2) cos/sin."""
+    half = head_dim // 2
+    if sum(sections) != half:
+        raise ValueError(f"M-RoPE sections {sections} must sum to head_dim/2 = {half}")
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    section_id = jnp.asarray(np.repeat(np.arange(3), sections))  # (half,)
+    pos_per_freq = positions[section_id]  # (half, B, S): stream per freq index
+    ang = jnp.moveaxis(pos_per_freq, 0, -1).astype(jnp.float32) * freqs  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# Attention math: chunked (flash-style) prefill/train + cached decode
+# ---------------------------------------------------------------------------
+
+
+def _mask_chunk(
+    q_off: jnp.ndarray,
+    k_off: jnp.ndarray,
+    q_chunk: int,
+    k_chunk: int,
+    causal: bool,
+    window: int | None,
+) -> jnp.ndarray:
+    q_ids = q_off + jnp.arange(q_chunk)[:, None]
+    k_ids = k_off + jnp.arange(k_chunk)[None, :]
+    mask = jnp.ones((q_chunk, k_chunk), dtype=bool)
+    if causal:
+        mask &= q_ids >= k_ids
+    if window is not None:
+        mask &= (q_ids - k_ids) < window
+    return mask
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, H, S, D)   (kv heads pre-expanded)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+    remat: bool = True,
+) -> jnp.ndarray:
+    """Online-softmax attention, chunked in both q and kv.
+
+    Never materializes more than (B, H, q_chunk, k_chunk) of logits — the
+    pure-XLA analogue of FlashAttention, required for the 32k-seq shapes where
+    full (S, S) logits would be terabytes. ``remat`` checkpoints each kv-step
+    so the backward pass recomputes chunk logits instead of storing them.
+    """
+    b, h, s, d = q.shape
+    if s % q_chunk or s % k_chunk:
+        # fall back to dense for small/ragged sequences (smoke tests)
+        return dense_attention(q, k, v, causal=causal, window=window)
+    scale = d ** -0.5
+    nq, nk = s // q_chunk, s // k_chunk
+    qc = q.reshape(b, h, nq, q_chunk, d)
+    kc = k.reshape(b, h, nk, k_chunk, d)
+    vc = v.reshape(b, h, nk, k_chunk, d)
+
+    def kv_step(carry, kv_idx):
+        m_prev, l_prev, acc, q_blk, q_off = carry
+        k_blk = jax.lax.dynamic_index_in_dim(kc, kv_idx, axis=2, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vc, kv_idx, axis=2, keepdims=False)
+        s_blk = (
+            jnp.einsum(
+                "bhqd,bhkd->bhqk",
+                q_blk.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+            )
+            * scale
+        )
+        mask = _mask_chunk(q_off, kv_idx * k_chunk, q_chunk, k_chunk, causal, window)
+        s_blk = jnp.where(mask[None, None], s_blk, _NEG_INF)
+        m_cur = jnp.max(s_blk, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask[None, None], jnp.exp(s_blk - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new, q_blk, q_off), None
+
+    kv_step_fn = jax.checkpoint(kv_step) if remat else kv_step
+
+    def q_step(_, q_idx):
+        q_blk = jax.lax.dynamic_index_in_dim(qc, q_idx, axis=2, keepdims=False)
+        q_off = q_idx * q_chunk
+        init = (
+            jnp.full((b, h, q_chunk, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((b, h, q_chunk, 1), jnp.float32),
+            jnp.zeros((b, h, q_chunk, d), jnp.float32),
+            q_blk,
+            q_off,
+        )
+        (m_f, l_f, acc_f, _, _), _ = jax.lax.scan(kv_step_fn, init, jnp.arange(nk))
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        return None, (acc_f / l_f).astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # out: (nq, B, H, q_chunk, D) -> (B, H, S, D)
+    return jnp.moveaxis(out, 0, 2).reshape(b, h, s, d)
+
+
+def dense_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Reference dense attention (small seqs / smoke tests)."""
+    b, h, s, d = q.shape
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * d ** -0.5
+    )
+    mask = _mask_chunk(jnp.int32(0), jnp.int32(0), s, s, causal, window)
+    logits = jnp.where(mask[None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, H, 1, D)
+    k_cache: jnp.ndarray,  # (B, KV, S_max, D)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # () or (B,) current position (the new token's index)
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly sharded) KV cache."""
+    b, h, _, d = q.shape
+    kv = k_cache.shape[1]
+    rep = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, kv, rep, d)
+    logits = jnp.einsum(
+        "bgrd,bgsd->bgrs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    s_max = k_cache.shape[2]
+    k_ids = jnp.arange(s_max)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]  # (B, 1)
+    valid = k_ids[None, :] <= pos_b
+    if window is not None:
+        valid &= (pos_b - k_ids[None, :]) < window
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS: dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}

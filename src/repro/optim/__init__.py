@@ -1,0 +1,1 @@
+"""Optimizers: AdamW, schedules, gradient compression."""

@@ -1,0 +1,25 @@
+"""LR schedules (as step -> multiplicative scale, composable with AdamWConfig)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(warmup: int, total: int, final_scale: float = 0.1):
+    """Linear warmup to 1.0 over ``warmup`` steps, cosine decay to final_scale."""
+
+    def fn(step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_scale + (1.0 - final_scale) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+def constant():
+    def fn(step: jnp.ndarray) -> jnp.ndarray:
+        return jnp.ones((), jnp.float32)
+
+    return fn

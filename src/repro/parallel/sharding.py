@@ -1,0 +1,205 @@
+"""Logical-axis sharding: MaxText-style rules with divisibility fallback.
+
+Every parameter / activation / cache tensor in the framework is annotated with
+a tuple of *logical* axis names at creation time. This module maps logical
+axes onto the physical mesh through an ordered rule table:
+
+  * each logical axis lists candidate mesh-axis groups, in preference order;
+  * a candidate is taken only if (a) all its mesh axes exist, (b) none of them
+    is already used by another dim of the same tensor, and (c) the product of
+    their sizes divides the dim size (GSPMD requires even sharding for inputs).
+
+The fallback behavior is what makes heterogeneous architectures work on one
+mesh: granite's single KV head simply ends up replicated, mixtral's 8 experts
+fall back from expert-parallel to d_ff tensor-parallel, a batch of 1
+(long_500k) leaves 'data' free for the KV-cache sequence axis, etc.
+
+Rules are plain data — swapping them is a first-class perf lever (§Perf).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axes = tuple
+
+# Candidate mesh-axis groups per logical axis, in preference order.
+# 'batch' prefers the full DP product (pod x data); 'embed' is the FSDP axis.
+DEFAULT_PARAM_RULES: dict[str | None, tuple[tuple[str, ...], ...]] = {
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "mlp": (("model",),),
+    "experts": (("model",),),
+    "embed": (("data",),),
+    "expert_embed": (("data",),),  # expert-weight FSDP axis (perf lever)
+    "expert_mlp": (("model",),),
+    "inner": (("model",),),  # mamba/xlstm inner projection dim
+    "batch": (("pod", "data"), ("data",)),
+    "layers": (),
+    "seq": (),
+    # decode KV caches arrive as step *inputs*, so their sequence axis needs a
+    # rule here too: prefer 'data' (free when batch=1, e.g. long_500k), else
+    # 'model' (decode_32k, where batch already took the DP axes and a
+    # replicated 32k cache would not fit HBM).
+    "cache_seq": (("data",), ("model",)),
+    "state": (),
+    "conv": (),
+    "codebooks": (),
+    None: (),
+}
+
+DEFAULT_ACT_RULES: dict[str | None, tuple[tuple[str, ...], ...]] = {
+    # 2D batch sharding first: when the global batch divides the full device
+    # count, activations are sharded batch-wise over data AND model — the
+    # per-device backward stash shrinks by |model| with ZERO per-layer
+    # resharding collectives (unlike sequence parallelism, which on current
+    # XLA SPMD costs f32 (B,S,D) gathers per block — measured 40x worse; see
+    # EXPERIMENTS.md §Perf). Params stay FSDP/TP-sharded; their per-layer
+    # all-gathers are unaffected. ORDER MATTERS: every 'pod'-bearing candidate
+    # precedes every pod-free one — a pod-free assignment on a multi-pod mesh
+    # would replicate the batch across pods (duplicate compute, no DP).
+    "batch": (
+        ("pod", "data", "model"),
+        ("pod", "data"),
+        ("data", "model"),
+        ("data",),
+    ),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "mlp": (("model",),),
+    "experts": (("model",),),
+    "expert_cap": (("pod", "data"), ("data",)),  # MoE dispatch-buffer capacity
+    # compute-time hint for expert weights: REPLICATED over the FSDP axis
+    # (one explicit gather per layer); forcing 'data' here instead makes SPMD
+    # re-shard around every expert matmul — measured +24% collective bytes
+    "expert_embed": (),
+    "expert_mlp": (("model",),),
+    "inner": (("model",),),
+    "vocab": (("model",),),
+    "embed": (),
+    "seq": (),
+    "cache_seq": (("data",), ("model",)),  # batch=1 -> data; else model
+    "state": (),
+    "codebooks": (),
+    "layers": (),
+    None: (),
+}
+
+
+def spec_for_axes(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str | None, tuple[tuple[str, ...], ...]],
+) -> PartitionSpec:
+    """Greedy logical->physical assignment with divisibility fallback."""
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape} rank mismatch")
+    used: set[str] = set()
+    entries: list[Any] = []
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for ax, dim in zip(axes, shape):
+        candidates = rules.get(ax, ())
+        chosen = None
+        for group in candidates:
+            if not all(g in mesh_sizes for g in group):
+                continue
+            if any(g in used for g in group):
+                continue
+            prod = 1
+            for g in group:
+                prod *= mesh_sizes[g]
+            if prod == 0 or dim % prod:
+                continue
+            chosen = group
+            break
+        if chosen is None:
+            entries.append(None)
+        else:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    # trailing Nones can be dropped but keeping them is harmless/explicit
+    return PartitionSpec(*entries)
+
+
+def sharding_for(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str | None, tuple[tuple[str, ...], ...]] | None = None,
+) -> NamedSharding:
+    rules = rules if rules is not None else DEFAULT_PARAM_RULES
+    return NamedSharding(mesh, spec_for_axes(axes, shape, mesh, rules))
+
+
+def tree_shardings(
+    axes_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    rules: dict[str | None, tuple[tuple[str, ...], ...]] | None = None,
+) -> Any:
+    """NamedSharding pytree for (axes pytree, ShapeDtypeStruct pytree)."""
+
+    def one(axes, sds):
+        return sharding_for(axes, sds.shape, mesh, rules)
+
+    return jax.tree.map(
+        one, axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation shard-hint context (used inside model code).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ShardCtx:
+    mesh: Mesh | None = None
+    act_rules: dict | None = None
+
+
+_ctx = threading.local()
+
+
+def _get_ctx() -> _ShardCtx:
+    if not hasattr(_ctx, "v"):
+        _ctx.v = _ShardCtx()
+    return _ctx.v
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, act_rules: dict | None = None):
+    """Enable in-model activation sharding constraints (used at trace time)."""
+    c = _get_ctx()
+    prev = (c.mesh, c.act_rules)
+    c.mesh, c.act_rules = mesh, act_rules or DEFAULT_ACT_RULES
+    try:
+        yield
+    finally:
+        c.mesh, c.act_rules = prev
+
+
+def shard_hint(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint under the active mesh; no-op outside it."""
+    c = _get_ctx()
+    if c.mesh is None:
+        return x
+    spec = spec_for_axes(axes, x.shape, c.mesh, c.act_rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(c.mesh, spec))
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh of the enclosing activation_sharding context (or None)."""
+    return _get_ctx().mesh
+
+
+def active_act_rules() -> dict | None:
+    return _get_ctx().act_rules

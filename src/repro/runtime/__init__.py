@@ -1,0 +1,1 @@
+"""Fault-tolerance runtime: health, elastic re-mesh, coordinator."""

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real single CPU device; only the dry-run forces 512
+placeholder devices (and only inside its own process)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

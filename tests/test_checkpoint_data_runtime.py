@@ -1,0 +1,189 @@
+"""Substrate: checkpoint atomicity/roundtrip, data determinism/sharding,
+coordinator crash-restart resume identity, health + elastic policies."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_arch
+from repro.data.pipeline import DataConfig, DataIterator, batch_at_step
+from repro.launch.train import build
+from repro.models import model
+from repro.optim import adamw
+from repro.runtime.elastic import largest_usable, plan_remesh
+from repro.runtime.health import HealthMonitor
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "opt": {"m": jnp.ones((2, 3)), "step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = _state()
+    mgr.save(3, state, extra={"data_step": 3})
+    restored, extra = mgr.restore(3, like=state)
+    assert extra == {"data_step": 3}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state())
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_tmp_dirs_invisible(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state())
+    (tmp_path / "step_0000000009.tmp").mkdir()  # simulated crashed save
+    assert mgr.all_steps() == [1]
+    assert mgr.restore_latest(like=_state())[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_in_seed_step():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    a = batch_at_step(cfg, 5)
+    b = batch_at_step(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_at_step(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_shards_disjoint():
+    kw = dict(vocab_size=1000, seq_len=16, global_batch=8, num_hosts=2, seed=0)
+    h0 = batch_at_step(DataConfig(host_id=0, **kw), 3)
+    h1 = batch_at_step(DataConfig(host_id=1, **kw), 3)
+    assert h0["tokens"].shape == (4, 16)  # global/hosts
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    b = batch_at_step(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_iterator_seek_resume():
+    cfg = DataConfig(vocab_size=100, seq_len=4, global_batch=2)
+    it = DataIterator(cfg)
+    for _ in range(3):
+        next(it)
+    state = it.state()
+    step, batch = next(it)
+    it2 = DataIterator.restore(cfg, state)
+    step2, batch2 = next(it2)
+    assert step == step2
+    np.testing.assert_array_equal(batch["tokens"], batch2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# coordinator: crash-restart resume identity
+# ---------------------------------------------------------------------------
+
+
+def test_crash_restart_resumes_bit_identical(tmp_path):
+    """Train 8 steps straight vs train-crash-at-5-restart: identical state."""
+
+    def run(ckpt_dir, fail_at=None, steps=8):
+        coord = build(
+            "yi_6b", reduced=True, batch=2, seq=16, steps=steps,
+            ckpt_dir=str(ckpt_dir),
+        )
+        try:
+            coord.run(steps=steps, fail_at_step=fail_at)
+        except RuntimeError:
+            pass
+        return coord
+
+    c1 = run(tmp_path / "a")  # uninterrupted
+    c2 = run(tmp_path / "b", fail_at=5)  # crashes after step 5
+    c2b = run(tmp_path / "b")  # restart, resumes from checkpoint
+
+    like = jax.eval_shape(lambda: None) or None
+    m1 = CheckpointManager(tmp_path / "a").restore_latest(
+        like=_train_state_like(c1)
+    )
+    m2 = CheckpointManager(tmp_path / "b").restore_latest(
+        like=_train_state_like(c2b)
+    )
+    assert m1[0] == m2[0] == 8
+    for a, b in zip(jax.tree.leaves(m1[1]), jax.tree.leaves(m2[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _train_state_like(coord):
+    return jax.eval_shape(coord.init_state_fn)
+
+
+def test_training_loss_improves(tmp_path):
+    coord = build("qwen3_8b", reduced=True, batch=2, seq=16, steps=12,
+                  ckpt_dir=str(tmp_path / "c"), lr=1e-3)
+    coord.run(steps=12)
+    losses = [m["loss"] for m in coord.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# health + elastic
+# ---------------------------------------------------------------------------
+
+
+def test_health_dead_host_detection():
+    mon = HealthMonitor(range(4), timeout_s=10)
+    for h in range(4):
+        mon.heartbeat(h, now=100.0)
+    mon.heartbeat(2, now=130.0)
+    dead = mon.dead_hosts(now=135.0)
+    assert dead == [0, 1, 3]
+    assert mon.alive_hosts() == [2]
+
+
+def test_straggler_needs_patience():
+    mon = HealthMonitor(range(4), straggler_factor=1.5, patience=3, ema_alpha=1.0)
+    for h in range(4):
+        mon.heartbeat(h, 0.0)
+    for step in range(3):
+        for h in range(4):
+            mon.report_step_time(h, 10.0 if h == 1 else 1.0)
+        s = mon.stragglers()
+    assert s == [1]
+    # one fast step resets the streak
+    mon.report_step_time(1, 1.0)
+    for h in (0, 2, 3):
+        mon.report_step_time(h, 1.0)
+    assert mon.stragglers() == []
+
+
+def test_elastic_plan_prefers_power_of_two():
+    assert largest_usable(16, 256, 1) == 16
+    assert largest_usable(13, 256, 1) == 8  # 13 alive -> use 8
+    plan = plan_remesh([0, 1, 2, 3, 5, 6, 7, 9, 10, 11, 12, 13, 14], 256)
+    assert plan.num_hosts == 8
+    assert len(plan.hosts) == 8
+    assert plan.global_batch % plan.num_hosts == 0
+
+
+def test_elastic_plan_no_survivors_raises():
+    with pytest.raises(RuntimeError):
+        plan_remesh([], 256)

@@ -1,0 +1,69 @@
+"""Calibrated energy model: reproduces the paper's headline numbers."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.energy import (
+    EnergyModelConfig,
+    average_comparison,
+    compare_sym_asym,
+    power_breakdown,
+)
+from repro.core.floorplan import BusActivity, SystolicArrayGeometry
+
+GEOM = SystolicArrayGeometry.paper_32x32()
+ACT = BusActivity.paper_resnet50()
+
+
+def test_paper_interconnect_saving_9p1_percent():
+    c = compare_sym_asym(GEOM, ACT)
+    assert c.interconnect_saving == pytest.approx(0.091, abs=0.002)
+
+
+def test_paper_total_saving_2p1_percent():
+    c = compare_sym_asym(GEOM, ACT)
+    assert c.total_saving == pytest.approx(0.021, abs=0.002)
+
+
+def test_paper_bus_saving_matches_amgm():
+    c = compare_sym_asym(GEOM, ACT)
+    assert c.bus_saving == pytest.approx(0.187, abs=0.002)
+
+
+def test_power_breakdown_sums():
+    b = power_breakdown(GEOM, ACT, 1.0)
+    assert b.total_w == pytest.approx(b.bus_w + b.fixed_interconnect_w + b.compute_w)
+    assert b.interconnect_w / b.total_w == pytest.approx(
+        EnergyModelConfig().interconnect_share_of_total, rel=1e-6
+    )
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    a_h=st.floats(0.02, 1.0),
+    a_v=st.floats(0.02, 1.0),
+    b_h=st.integers(2, 64),
+    b_v=st.integers(2, 64),
+)
+def test_asymmetric_never_worse(a_h, a_v, b_h, b_v):
+    geom = SystolicArrayGeometry(rows=16, cols=16, b_h=b_h, b_v=b_v)
+    c = compare_sym_asym(geom, BusActivity(a_h=a_h, a_v=a_v))
+    assert c.interconnect_saving >= -1e-9
+    assert c.total_saving >= -1e-9
+
+
+def test_per_layer_design_point_fixed_at_average():
+    """Fig. 4 methodology: ONE aspect ratio (from the average profile) is used
+    for all layers; per-layer savings vary but stay non-negative when layer
+    activities keep a_v*B_v > a_h*B_h (always true here)."""
+    layers = [BusActivity(0.15, 0.30), BusActivity(0.25, 0.40), BusActivity(0.30, 0.35)]
+    comps = [
+        compare_sym_asym(GEOM, la, design_act=ACT, reference_act=la) for la in layers
+    ]
+    for c in comps:
+        assert c.aspect_opt == pytest.approx(3.8, abs=0.05)  # fixed design point
+        assert c.interconnect_saving > 0
+    avg = average_comparison(comps)
+    assert 0 < avg["interconnect_saving"] < 0.2
+    assert 0 < avg["total_saving"] < 0.05

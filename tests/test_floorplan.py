@@ -1,0 +1,116 @@
+"""Paper Eq. 1-6: wirelength + power-optimal aspect ratio (property-tested)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.floorplan import (
+    BusActivity,
+    SystolicArrayGeometry,
+    accumulator_width,
+    bus_power,
+    bus_power_ratio_vs_square,
+    numeric_optimal_aspect,
+    optimal_aspect_power,
+    optimal_aspect_wirelength,
+    pe_dims_from_aspect,
+    wirelength_h,
+    wirelength_total,
+    wirelength_v,
+)
+
+GEOM = SystolicArrayGeometry.paper_32x32()
+ACT = BusActivity.paper_resnet50()
+
+
+def test_paper_accumulator_width_is_37_bits():
+    assert accumulator_width(16, 32) == 37
+    assert GEOM.b_h == 16 and GEOM.b_v == 37
+
+
+def test_paper_optimal_aspect_is_3p8():
+    """Section IV: 'we selected an aspect ratio of W/H=3.8'."""
+    assert optimal_aspect_power(GEOM, ACT) == pytest.approx(3.8, abs=0.05)
+
+
+def test_wirelength_optimum_is_bv_over_bh():
+    """Eq. 5: W/H = B_v/B_h (uniform activity reduces Eq. 6 to Eq. 5)."""
+    uniform = BusActivity(a_h=0.3, a_v=0.3)
+    assert optimal_aspect_power(GEOM, uniform) == pytest.approx(
+        optimal_aspect_wirelength(GEOM)
+    )
+    assert optimal_aspect_wirelength(GEOM) == pytest.approx(37 / 16)
+
+
+geoms = st.builds(
+    SystolicArrayGeometry,
+    rows=st.integers(2, 256),
+    cols=st.integers(2, 256),
+    b_h=st.integers(1, 64),
+    b_v=st.integers(1, 64),
+    pe_area_um2=st.floats(10.0, 1e5),
+)
+acts = st.builds(
+    BusActivity,
+    a_h=st.floats(0.01, 1.0),
+    a_v=st.floats(0.01, 1.0),
+)
+
+
+@settings(deadline=None, max_examples=60)
+@given(geom=geoms, act=acts)
+def test_closed_form_matches_numeric_minimizer(geom, act):
+    """Eq. 6 equals brute-force golden-section search on the power curve."""
+    closed = optimal_aspect_power(geom, act)
+    if not (1 / 64 < closed < 64):  # numeric search window
+        return
+    numeric = numeric_optimal_aspect(geom, act)
+    assert numeric == pytest.approx(closed, rel=1e-4)
+
+
+@settings(deadline=None, max_examples=60)
+@given(geom=geoms, act=acts, aspect=st.floats(0.05, 20.0))
+def test_optimal_aspect_never_worse_than_any_other(geom, act, aspect):
+    opt = optimal_aspect_power(geom, act)
+    assert bus_power(geom, act, opt) <= bus_power(geom, act, aspect) * (1 + 1e-9)
+
+
+@settings(deadline=None, max_examples=60)
+@given(geom=geoms, act=acts)
+def test_amgm_ratio_formula(geom, act):
+    """P_opt / P_square == 2 sqrt(xy)/(x+y) with x=B_h a_h, y=B_v a_v."""
+    x = geom.b_h * act.a_h
+    y = geom.b_v * act.a_v
+    want = 2 * math.sqrt(x * y) / (x + y)
+    opt = optimal_aspect_power(geom, act)
+    got = bus_power(geom, act, opt) / bus_power(geom, act, 1.0)
+    assert got == pytest.approx(want, rel=1e-9)
+    assert bus_power_ratio_vs_square(geom, act) == pytest.approx(want, rel=1e-9)
+
+
+@settings(deadline=None, max_examples=40)
+@given(geom=geoms, aspect=st.floats(0.05, 20.0))
+def test_wirelength_decomposition_and_area_conservation(geom, aspect):
+    w, h = pe_dims_from_aspect(geom, aspect)
+    assert w * h == pytest.approx(geom.pe_area_um2, rel=1e-9)
+    assert w / h == pytest.approx(aspect, rel=1e-9)
+    assert wirelength_total(geom, aspect) == pytest.approx(
+        wirelength_h(geom, aspect) + wirelength_v(geom, aspect)
+    )
+    # Eq. 1/2 exact forms
+    assert wirelength_h(geom, aspect) == pytest.approx(
+        geom.rows * geom.cols * w * geom.b_h
+    )
+    assert wirelength_v(geom, aspect) == pytest.approx(
+        geom.rows * geom.cols * h * geom.b_v
+    )
+
+
+def test_square_is_optimal_iff_balanced():
+    """x == y  =>  the square layout is already optimal (ratio 1)."""
+    g = SystolicArrayGeometry(rows=8, cols=8, b_h=20, b_v=10)
+    act = BusActivity(a_h=0.2, a_v=0.4)  # x = 4.0, y = 4.0
+    assert optimal_aspect_power(g, act) == pytest.approx(1.0)
+    assert bus_power_ratio_vs_square(g, act) == pytest.approx(1.0)

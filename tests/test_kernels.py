@@ -1,0 +1,168 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes as required for every kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.switching import stream_toggle_rate
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.toggle_count.ops import (
+    stream_activity,
+    stream_toggle_count,
+    stream_toggle_count_i64,
+)
+from repro.kernels.toggle_count.ref import stream_toggle_count_ref
+from repro.kernels.ws_matmul.ops import ws_matmul
+from repro.kernels.ws_matmul.ref import ws_matmul_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# toggle_count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape", [(2, 1), (17, 3), (100, 64), (257, 129), (512, 256), (1000, 7)]
+)
+def test_toggle_count_shapes(shape):
+    s = jnp.asarray(RNG.integers(-(2**31), 2**31, size=shape, dtype=np.int64).astype(np.int32))
+    got = stream_toggle_count(s, interpret=True)
+    want = int(stream_toggle_count_ref(s))
+    assert got == want
+
+
+@pytest.mark.parametrize("bits", [8, 16, 32, 37, 48, 64])
+def test_stream_activity_matches_numpy_oracle(bits):
+    vals = RNG.integers(-(2 ** (bits - 1)) + 1, 2 ** (bits - 1) - 1, size=(60, 5))
+    got = stream_activity(vals, bits=bits, interpret=True)
+    want = stream_toggle_rate(vals, bits=bits)
+    assert got == pytest.approx(want, abs=1e-12)
+
+
+def test_toggle_count_i64_splits_planes_exactly():
+    vals = RNG.integers(-(2**62), 2**62, size=(40, 3))
+    got = stream_toggle_count_i64(vals, interpret=True)
+    want = sum(
+        (int(a) ^ int(b)).bit_count() & 0xFFFFFFFFFFFFFFFF
+        for col in vals.T
+        for a, b in zip(col[:-1].view(np.uint64), col[1:].view(np.uint64))
+    )
+    assert got == want
+
+
+def test_toggle_count_1d_and_degenerate():
+    s = jnp.asarray(RNG.integers(0, 100, size=(50,), dtype=np.int32))
+    got = stream_toggle_count(s, interpret=True)
+    want = int(stream_toggle_count_ref(s[:, None]))
+    assert got == want
+    assert stream_toggle_count(s[:1], interpret=True) == 0
+
+
+# ---------------------------------------------------------------------------
+# ws_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(128, 128, 128), (1, 1, 1), (200, 300, 170), (127, 129, 255), (384, 256, 512)],
+)
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+def test_ws_matmul_int_exact(m, k, n, dtype):
+    info = jnp.iinfo(dtype)
+    lo = max(info.min, -1000)
+    hi = min(info.max, 1000)
+    a = jnp.asarray(RNG.integers(lo, hi, size=(m, k)), dtype=dtype)
+    w = jnp.asarray(RNG.integers(lo, hi, size=(k, n)), dtype=dtype)
+    got = ws_matmul(a, w, interpret=True)
+    want = ws_matmul_ref(a, w)
+    assert got.dtype == jnp.int32
+    assert jnp.all(got == want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(130, 260, 140), (64, 512, 64)])
+def test_ws_matmul_float_close(dtype, m, k, n):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype=dtype)
+    w = jnp.asarray(RNG.normal(size=(k, n)), dtype=dtype)
+    got = ws_matmul(a, w, interpret=True)
+    want = ws_matmul_ref(a, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+def test_ws_matmul_block_shapes():
+    a = jnp.asarray(RNG.integers(-50, 50, size=(100, 90)), dtype=jnp.int8)
+    w = jnp.asarray(RNG.integers(-50, 50, size=(90, 60)), dtype=jnp.int8)
+    want = ws_matmul_ref(a, w)
+    for bm, bn, bk in [(32, 32, 32), (64, 128, 32), (128, 64, 64)]:
+        got = ws_matmul(a, w, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+        assert jnp.all(got == want)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+def _ref(q, k, v, **kw):
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    kr = jnp.repeat(k, rep, axis=1).reshape(b * h, s, d)
+    vr = jnp.repeat(v, rep, axis=1).reshape(b * h, s, d)
+    return attention_ref(q.reshape(b * h, s, d), kr, vr, **kw).reshape(b, h, s, d)
+
+
+@pytest.mark.parametrize(
+    "b,h,kv,s,d", [(1, 1, 1, 128, 64), (2, 4, 2, 200, 64), (1, 8, 1, 256, 128)]
+)
+def test_flash_causal_gqa(b, h, kv, s, d):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = _ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 128])
+def test_flash_sliding_window(window):
+    b, h, kv, s, d = 1, 2, 2, 256, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    want = _ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    b, h, kv, s, d = 2, 2, 1, 128, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype=jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = _ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_flash_block_size_invariance():
+    b, h, kv, s, d = 1, 2, 2, 512, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype=jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    bq = flash_attention(q, k, v, block_q=64, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bq), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,100 @@
+"""Optimizer: AdamW reference math, clipping, schedules, grad compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import adamw, compress
+from repro.optim.schedule import constant, linear_warmup_cosine
+
+
+def test_adamw_matches_hand_reference():
+    cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.01,
+                            clip_norm=None)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    st_ = adamw.init_state(cfg, p)
+    new_p, new_st, _ = adamw.apply_updates(cfg, p, st_, g)
+    # hand math, step 1: mhat = g, vhat = g^2
+    gh = np.array([0.5, 0.25])
+    delta = gh / (np.sqrt(gh**2) + 1e-8) + 0.01 * np.array([1.0, -2.0])
+    want = np.array([1.0, -2.0]) - 0.1 * delta
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert int(new_st["step"]) == 1
+
+
+def test_clip_norm_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    st_ = adamw.init_state(cfg, p)
+    _, _, metrics = adamw.apply_updates(cfg, p, st_, g)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_moment_dtype_bf16_halves_state():
+    cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    p = {"w": jnp.zeros((8, 8), jnp.float32)}
+    st_ = adamw.init_state(cfg, p)
+    assert st_["m"]["w"].dtype == jnp.bfloat16
+    assert st_["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_and_decay():
+    fn = linear_warmup_cosine(warmup=10, total=110, final_scale=0.1)
+    assert float(fn(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(fn(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-6)
+    assert float(constant()(jnp.asarray(7))) == 1.0
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, clip_norm=None)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st_ = adamw.init_state(cfg, p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}  # d/dw w^2
+        p, st_, _ = adamw.apply_updates(cfg, p, st_, g)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_compress_is_cast_roundtrip():
+    g = {"w": jnp.asarray([1.0 + 1e-4, -2.0])}
+    c = compress.compress_bf16(g)
+    np.testing.assert_allclose(
+        np.asarray(c["w"]), np.asarray(g["w"].astype(jnp.bfloat16), np.float32)
+    )
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 1000), steps=st.integers(5, 40))
+def test_int8_error_feedback_sum_is_unbiased(seed, steps):
+    """Error feedback: the SUM of compressed gradients tracks the sum of raw
+    gradients to within one quantization step (the residual bound)."""
+    rng = np.random.default_rng(seed)
+    grads = [
+        {"w": jnp.asarray(rng.normal(size=(16,)), dtype=jnp.float32)}
+        for _ in range(steps)
+    ]
+    residual = compress.init_error_feedback(grads[0])
+    total_raw = np.zeros(16)
+    total_comp = np.zeros(16)
+    max_scale = 0.0
+    for g in grads:
+        comp, residual = compress.compress_int8_ef(g, residual)
+        total_raw += np.asarray(g["w"])
+        total_comp += np.asarray(comp["w"])
+        max_scale = max(max_scale, float(jnp.max(jnp.abs(g["w"]))) / 127.0)
+    # |sum raw - sum compressed| == |final residual| <= one quant step bound
+    err = np.abs(total_raw - total_comp)
+    np.testing.assert_allclose(err, np.abs(np.asarray(residual["w"])), atol=1e-5)
+    assert err.max() <= max_scale * 2 + 1e-6

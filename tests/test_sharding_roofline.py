@@ -1,0 +1,255 @@
+"""Sharding rules (fallback semantics), HLO collective parsing, roofline math,
+and a subprocess end-to-end dry-run on a small forced-device mesh."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.hlo import collective_stats
+from repro.analysis.roofline import model_flops_for, roofline
+from repro.configs.registry import SHAPES, get_arch
+from repro.models.model import count_params_analytic
+from repro.parallel.sharding import (
+    DEFAULT_ACT_RULES,
+    DEFAULT_PARAM_RULES,
+    spec_for_axes,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names + devices.shape are consulted."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        import numpy as np
+
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_rules_basic_tp_fsdp():
+    spec = spec_for_axes(("embed", "mlp"), (4096, 14336), MESH1, DEFAULT_PARAM_RULES)
+    assert tuple(spec) == ("data", "model")
+
+
+def test_kv_heads_fallback_replicated():
+    """granite: kv=1 cannot shard over model=16 -> replicated dim."""
+    spec = spec_for_axes(
+        ("embed", "kv_heads", None), (6144, 1, 128), MESH1, DEFAULT_PARAM_RULES
+    )
+    assert tuple(spec) == ("data", None, None)
+
+
+def test_experts_fallback_to_mlp_tp():
+    """mixtral: 8 experts % 16 != 0 -> experts dim unsharded, mlp takes TP."""
+    spec = spec_for_axes(
+        ("experts", "embed", "mlp"), (8, 4096, 14336), MESH1, DEFAULT_PARAM_RULES
+    )
+    assert tuple(spec) == (None, "data", "model")
+    # 128 experts divide -> EP
+    spec = spec_for_axes(
+        ("experts", "embed", "mlp"), (128, 5120, 8192), MESH1, DEFAULT_PARAM_RULES
+    )
+    assert tuple(spec) == ("model", "data", None)
+
+
+def test_no_mesh_axis_used_twice():
+    spec = spec_for_axes(
+        ("heads", "mlp", "vocab"), (32, 14336, 32000), MESH1, DEFAULT_PARAM_RULES
+    )
+    used = [s for s in spec if s is not None]
+    flat = []
+    for u in used:
+        flat.extend(u if isinstance(u, tuple) else (u,))
+    assert len(flat) == len(set(flat))
+
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+_AXIS_NAMES = [
+    "batch", "seq", "embed", "heads", "kv_heads", "mlp", "experts",
+    "expert_cap", "vocab", "cache_seq", "inner", None,
+]
+
+
+@settings(deadline=None, max_examples=200)
+@given(
+    axes=st.lists(st.sampled_from(_AXIS_NAMES), min_size=1, max_size=5),
+    dims=st.lists(st.integers(1, 4096), min_size=5, max_size=5),
+    multi_pod=st.booleans(),
+    rules_kind=st.booleans(),
+)
+def test_spec_invariants_hold_for_any_axes(axes, dims, multi_pod, rules_kind):
+    """Allocator invariants for ANY logical-axes tuple: (a) every assigned
+    mesh-axis group divides its dim, (b) no mesh axis is used twice, (c) the
+    spec has one entry per dim."""
+    mesh = MESH2 if multi_pod else MESH1
+    rules = DEFAULT_PARAM_RULES if rules_kind else DEFAULT_ACT_RULES
+    shape = tuple(dims[: len(axes)])
+    spec = spec_for_axes(axes, shape, mesh, rules)
+    assert len(tuple(spec)) == len(axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = []
+    for entry, dim in zip(tuple(spec), shape):
+        if entry is None:
+            continue
+        group = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for g in group:
+            prod *= sizes[g]
+            used.append(g)
+        assert dim % prod == 0, f"{entry} does not divide {dim}"
+    assert len(used) == len(set(used)), f"axis reused in {tuple(spec)}"
+
+
+def test_batch_2d_and_fallbacks():
+    # full 2D when divisible by 256
+    spec = spec_for_axes(("batch", "seq"), (256, 4096), MESH1, DEFAULT_ACT_RULES)
+    assert tuple(spec)[0] == ("data", "model")
+    # multi-pod 256 % 512 != 0 -> (pod, data)
+    spec = spec_for_axes(("batch", "seq"), (256, 4096), MESH2, DEFAULT_ACT_RULES)
+    assert tuple(spec)[0] == ("pod", "data")
+    # batch=1: unsharded; cache_seq then takes data
+    spec = spec_for_axes(
+        ("batch", "kv_heads", "cache_seq", None),
+        (1, 8, 524288, 128),
+        MESH1,
+        DEFAULT_ACT_RULES,
+    )
+    assert tuple(spec) == (None, None, "data", None)
+    # batch=128 takes DP axes; cache_seq falls to model
+    spec = spec_for_axes(
+        ("batch", "kv_heads", "cache_seq", None),
+        (128, 8, 32768, 128),
+        MESH1,
+        DEFAULT_ACT_RULES,
+    )
+    assert tuple(spec)[0] == ("data", "model") or tuple(spec)[0] == "data"
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = textwrap.dedent(
+    """
+    %ag = bf16[16,4096]{1,0} all-gather(%p0), replica_groups={{0,1}}
+    %ar.1 = f32[256,128]{1,0} all-reduce(%x), to_apply=%add
+    %t = (f32[8,8]{1,0}, bf16[4,4]{1,0}) all-to-all(%a, %b)
+    %rs = f32[128]{0} reduce-scatter(%y), dimensions={0}
+    %cp = bf16[2,2]{1,0} collective-permute-start(%z)
+    %not_a_collective = f32[10]{0} add(%u, %v)
+    """
+)
+
+
+def test_collective_stats_parses_ops_and_bytes():
+    cs = collective_stats(HLO_SAMPLE)
+    assert cs.count_by_op == {
+        "all-gather": 1,
+        "all-reduce": 1,
+        "all-to-all": 1,
+        "reduce-scatter": 1,
+        "collective-permute": 1,
+    }
+    assert cs.bytes_by_op["all-gather"] == 16 * 4096 * 2
+    assert cs.bytes_by_op["all-reduce"] == 256 * 128 * 4
+    assert cs.bytes_by_op["all-to-all"] == 8 * 8 * 4 + 4 * 4 * 2
+    assert cs.bytes_by_op["reduce-scatter"] == 128 * 4
+    assert cs.total_count == 5
+
+
+# ---------------------------------------------------------------------------
+# roofline math
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_terms_and_dominance():
+    r = roofline(
+        flops_per_device=197e12,  # exactly 1s of compute
+        bytes_per_device=819e9 * 2,  # 2s of memory
+        coll_bytes_per_device=50e9 * 0.5,  # 0.5s of collectives
+        chips=256,
+        model_flops=197e12 * 256 * 0.5,  # half the compute is "useful"
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.25)  # 0.5s useful / 2s bound
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("yi_6b")
+    n = count_params_analytic(cfg, active_only=True, exclude_embed=True)
+    train = model_flops_for(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6.0 * n * 256 * 4096)
+    dec = model_flops_for(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2.0 * n * 128)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end mini dry-run in a subprocess (8 forced host devices)
+# ---------------------------------------------------------------------------
+
+MINI = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, jax
+    from repro.configs.registry import get_arch, ShapeSpec
+    from repro.launch.mesh import make_mesh
+    from repro.launch import specs as specs_lib
+    from repro.launch.steps import step_for_shape
+    from repro.optim import adamw
+    from repro.parallel import sharding as sh
+    from repro.analysis.hlo import collective_stats
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cfg = get_arch("yi_6b").reduced().with_dtypes("bfloat16", "bfloat16")
+    shape = ShapeSpec("t", "train", 64, 8)
+    in_specs, in_axes = specs_lib.input_specs(cfg, shape)
+    step, donate = step_for_shape(cfg, shape, adamw.AdamWConfig())
+    args = (in_specs["state"], in_specs["batch"])
+    aaxes = (in_axes["state"], in_axes["batch"])
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    in_sh = jax.tree.map(
+        lambda ax, s: sh.sharding_for(ax, s.shape, mesh, sh.DEFAULT_PARAM_RULES),
+        aaxes, args, is_leaf=is_leaf)
+    with sh.activation_sharding(mesh):
+        compiled = jax.jit(step, in_shardings=in_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    cs = collective_stats(compiled.as_text())
+    print(json.dumps({
+        "ok": True,
+        "temp": compiled.memory_analysis().temp_size_in_bytes,
+        "colls": cs.total_count,
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_subprocess_mini_dryrun():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", MINI],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["colls"] > 0
