@@ -1,0 +1,9 @@
+"""Benchmark modules (one per paper table/figure; see run.py).
+
+Shared smoke-mode settings live here so sibling benches don't import from
+each other."""
+
+# The seed's subsampled profiling setting, used by every bench's smoke mode.
+# Benches that profile the same layers share one spelling so their profiles
+# share content-keyed cache entries.
+SMOKE_SUBSAMPLE = dict(max_tiles=3, max_stream=96)

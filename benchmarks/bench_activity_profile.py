@@ -1,0 +1,116 @@
+"""numpy-vs-fused switching-activity profiling: µs/profile at EQUAL fidelity.
+
+The profiler is the hot path of every figure (activities drive Eq. 6), so
+this bench records the perf win of the fused single-pass engine
+(``repro.kernels.activity_profile``) over the seed's host-side numpy path —
+both profiling the SAME exact full-stream workload (every weight tile, every
+stream step; no subsampling on either side) and verified to agree before
+timing. Also records the content-keyed cache hit time.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.switching import clear_profile_cache, profile_ws_gemm
+from repro.core.quant import quantize_symmetric
+from repro.core.workloads import (
+    RESNET50_TABLE1,
+    conv_to_gemm,
+    synth_activations,
+    synth_weights,
+)
+
+ROWS = COLS = 32
+BITS, B_V = 16, 37
+
+
+def _operands(layer, seed):
+    g = conv_to_gemm(layer)
+    a = quantize_symmetric(synth_activations(g.m, g.k, layer.input_density, seed=seed), BITS).values
+    w = quantize_symmetric(synth_weights(g.k, g.n, seed=seed + 1), BITS).values
+    return g, a, w
+
+
+def _best_us(fn, repeat):
+    best = float("inf")
+    result = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, result
+
+
+def run(smoke: bool = False) -> list[dict]:
+    # L4 is mid-sized (196x512x256); L1 adds the long-stream case (T=3136).
+    layers = [RESNET50_TABLE1[3]] if smoke else [RESNET50_TABLE1[3], RESNET50_TABLE1[0]]
+    repeat = 1 if smoke else 2
+    out = []
+    np_total = fused_total = 0.0
+    for i, layer in enumerate(layers):
+        g, a, w = _operands(layer, seed=i)
+        kwargs = dict(rows=ROWS, cols=COLS, b_h=BITS, b_v=B_V, use_cache=False)
+        # warm the fused engine's compile cache before timing
+        p_fused = profile_ws_gemm(a, w, backend="pallas", **kwargs)
+        us_np, p_np = _best_us(lambda: profile_ws_gemm(a, w, backend="numpy", **kwargs), repeat)
+        us_fused, p_fused = _best_us(lambda: profile_ws_gemm(a, w, backend="pallas", **kwargs), repeat)
+        agree = (
+            abs(p_np.a_h - p_fused.a_h) < 1e-9
+            and abs(p_np.a_v - p_fused.a_v) < 1e-9
+            and p_np.v_transitions == p_fused.v_transitions
+        )
+        if not agree:
+            # a speedup over disagreeing results is meaningless — fail the
+            # module (benchmarks.run reports an ERROR row and exits nonzero)
+            raise RuntimeError(
+                f"fused/numpy profile mismatch on {layer.name}: "
+                f"numpy=({p_np.a_h}, {p_np.a_v}) fused=({p_fused.a_h}, {p_fused.a_v})"
+            )
+        np_total += us_np
+        fused_total += us_fused
+        out.append(
+            {
+                "name": f"activity_profile/{layer.name}_exact/numpy",
+                "us_per_call": round(us_np, 1),
+                "derived": f"GEMM={g.m}x{g.k}x{g.n} v_trans={p_np.v_transitions}",
+            }
+        )
+        out.append(
+            {
+                "name": f"activity_profile/{layer.name}_exact/fused",
+                "us_per_call": round(us_fused, 1),
+                "derived": f"speedup={us_np / us_fused:.1f}x agree={agree}",
+            }
+        )
+
+    out.append(
+        {
+            "name": "activity_profile/aggregate",
+            "us_per_call": round(fused_total / len(layers), 1),
+            "derived": (
+                f"numpy={np_total / len(layers):.0f}us/profile "
+                f"fused={fused_total / len(layers):.0f}us/profile "
+                f"speedup={np_total / fused_total:.1f}x (target >=5x)"
+            ),
+        }
+    )
+
+    # content-keyed cache: second identical profile is a dictionary hit
+    clear_profile_cache()
+    g, a, w = _operands(layers[0], seed=0)
+    profile_ws_gemm(a, w, ROWS, COLS, BITS, B_V)
+    us_hit, _ = _best_us(lambda: profile_ws_gemm(a, w, ROWS, COLS, BITS, B_V), repeat=3)
+    out.append(
+        {
+            "name": "activity_profile/cache_hit",
+            "us_per_call": round(us_hit, 1),
+            "derived": "content-keyed profile cache (sha256 of operands+geometry)",
+        }
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

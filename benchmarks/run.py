@@ -1,14 +1,20 @@
 """Benchmark harness: one module per paper table/figure (+ kernel layer).
 
 Prints ``name,us_per_call,derived`` CSV. Exit code 1 if any module fails.
+
+``python -m benchmarks.run --smoke`` runs every module in its cheap
+configuration (subsampled profiles, fewer repeats) — a CI-sized smoke pass.
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 from benchmarks import (
+    bench_activity_profile,
     bench_aspect_sweep,
     bench_design_space,
     bench_fig4_fig5_power,
@@ -24,15 +30,25 @@ MODULES = [
     ("mxu_scale", bench_mxu_scale),
     ("design_space", bench_design_space),
     ("kernels", bench_kernels),
+    ("activity_profile", bench_activity_profile),
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke", action="store_true", help="cheap configuration for CI smoke runs"
+    )
+    args = parser.parse_args(argv)
+
     print("name,us_per_call,derived")
     failed = False
     for name, mod in MODULES:
         try:
-            for row in mod.run():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            for row in mod.run(**kwargs):
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']},{derived}")
         except Exception:

@@ -41,9 +41,9 @@ for arch in ARCH_IDS:
         w_f = rng.normal(0, 1 / np.sqrt(k), size=(k, n))
         a_q = quantize_symmetric(a_f, BITS).values
         w_q = quantize_symmetric(w_f, BITS).values
-        profiles.append(
-            profile_ws_gemm(a_q, w_q, ROWS, COLS, geom.b_h, geom.b_v, max_tiles=2)
-        )
+        # exact full-stream profile (fused engine); identical layers across
+        # runs hit the content-keyed cache
+        profiles.append(profile_ws_gemm(a_q, w_q, ROWS, COLS, geom.b_h, geom.b_v))
     avg = combine_profiles(profiles)
     act = BusActivity(a_h=min(avg.a_h, 1.0), a_v=min(avg.a_v, 1.0))
     c = compare_sym_asym(geom, act)

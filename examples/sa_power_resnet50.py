@@ -7,16 +7,17 @@ WS-dataflow switching profile -> floorplan optimization -> Fig. 4/5 report.
 
 from repro.core.energy import average_comparison, compare_sym_asym
 from repro.core.floorplan import BusActivity, SystolicArrayGeometry, optimal_aspect_power
-from repro.core.switching import combine_profiles
+from repro.core.switching import combine_profiles, profile_cache_info
 from repro.core.systolic import schedule_gemm
 from repro.core.workloads import RESNET50_TABLE1, conv_to_gemm, profile_conv_layer
 
 geom = SystolicArrayGeometry.paper_32x32()
 
 print("profiling Table-I layers on the 32x32 WS array (int16)...")
+print("(exact full-stream profiles via the fused activity engine; cached)")
 profiles = []
 for i, layer in enumerate(RESNET50_TABLE1):
-    p = profile_conv_layer(layer, max_tiles=4, max_stream=128, seed=i)
+    p = profile_conv_layer(layer, seed=i)
     profiles.append(p)
     g = conv_to_gemm(layer)
     s = schedule_gemm(g.m, g.k, g.n, 32, 32)
@@ -55,3 +56,4 @@ print(
     f"paper-calibrated point:    {paper.interconnect_saving*100:.2f}% / "
     f"{paper.total_saving*100:.2f}%  at W/H={paper.aspect_opt:.2f}"
 )
+print(f"profile cache: {profile_cache_info()}")

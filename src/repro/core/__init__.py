@@ -18,6 +18,9 @@ from repro.core.energy import (  # noqa: F401
 )
 from repro.core.switching import (  # noqa: F401
     ActivityProfile,
+    clear_profile_cache,
+    combine_profiles,
+    profile_cache_info,
     profile_ws_gemm,
     stream_toggle_rate,
 )

@@ -16,14 +16,38 @@ Partial sums need up to ``2*B + ceil(log2 R)`` bits (37 for the paper's
 config), so this module carries them as int64 and counts toggles on the
 two's-complement representation truncated to the bus width.
 
-numpy is used for the host-side oracle (exact int64 bit manipulation); the
-TPU-accelerated path lives in ``repro.kernels.toggle_count`` and is verified
-against this module.
+Backends
+--------
+``profile_ws_gemm`` dispatches between two implementations of the same
+counts (verified bit-exact against each other in tests):
+
+  * ``backend="numpy"`` — the host-side oracle below: per-tile Python loop,
+    materialized (T, R, C) int64 cumsum. Exact int64 bit manipulation;
+    slow, memory-heavy, kept as the verification reference.
+  * ``backend="pallas"`` — the fused single-pass engine in
+    ``repro.kernels.activity_profile``: one kernel grid over (weight tile,
+    time block) computes the partial-sum cumsum in lo/hi int32 planes and
+    toggle totals without ever materializing (T, R, C). Runs the Pallas TPU
+    kernel on TPU hosts and an identical-math jitted XLA program elsewhere.
+  * ``backend="auto"`` (default) — "pallas" whenever jax is importable and
+    operands are int16-range (the engine's exactness contract), else numpy.
+
+Exact full-stream profiling is the DEFAULT: every weight tile, every stream
+step. Subsampling (``max_tiles``/``max_stream``) is an explicit opt-in and
+both backends draw the identical subsample plan from the seed.
+
+Results are memoized in a content-keyed cache (sha256 over operand bytes +
+geometry), so re-profiling an identical layer is free; see
+``clear_profile_cache`` / ``profile_cache_info``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import warnings
+from collections import OrderedDict
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -37,7 +61,12 @@ __all__ = [
     "ActivityProfile",
     "profile_ws_tile",
     "profile_ws_gemm",
+    "combine_profiles",
+    "clear_profile_cache",
+    "profile_cache_info",
 ]
+
+DEFAULT_BACKEND = os.environ.get("REPRO_ACTIVITY_BACKEND", "auto")
 
 _M1 = np.uint64(0x5555555555555555)
 _M2 = np.uint64(0x3333333333333333)
@@ -122,7 +151,12 @@ def vertical_partial_sums(a_tile: np.ndarray, w_tile: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class ActivityProfile:
-    """Measured switching activities + supporting statistics for one workload."""
+    """Measured switching activities + supporting statistics for one workload.
+
+    ``input_elements`` is the number of operand elements behind
+    ``input_zero_fraction`` (0 for hand-built profiles — ``combine_profiles``
+    then falls back to an unweighted mean for the zero fraction).
+    """
 
     a_h: float
     a_v: float
@@ -131,6 +165,7 @@ class ActivityProfile:
     h_transitions: int
     v_transitions: int
     input_zero_fraction: float
+    input_elements: int = 0
 
     def as_bus_activity(self):
         from repro.core.floorplan import BusActivity
@@ -155,6 +190,161 @@ def profile_ws_tile(
     return a_h, a_v, h_trans, v_trans
 
 
+def _tile_plan(
+    m: int,
+    k: int,
+    n: int,
+    rows: int,
+    cols: int,
+    max_tiles: int | None,
+    max_stream: int | None,
+    seed: int,
+) -> list[tuple[int, int, int, int, int, int]]:
+    """Subsample plan: (k0, k1, n0, n1, t0, t1) per profiled tile.
+
+    One function shared by BOTH backends so the numpy oracle and the fused
+    engine see byte-identical subsamples (same rng draw order as the seed
+    implementation: one tile choice, then one stream start per tile).
+    Stream windows are consecutive — toggle statistics need adjacency.
+    """
+    rng = np.random.default_rng(seed)
+    k_tiles = -(-k // rows)
+    n_tiles = -(-n // cols)
+    tile_ids = [(kt, nt) for kt in range(k_tiles) for nt in range(n_tiles)]
+    if max_tiles is not None and len(tile_ids) > max_tiles:
+        idx = rng.choice(len(tile_ids), size=max_tiles, replace=False)
+        tile_ids = [tile_ids[i] for i in sorted(idx)]
+    plan = []
+    for kt, nt in tile_ids:
+        t0, t1 = 0, m
+        if max_stream is not None and m > max_stream:
+            t0 = int(rng.integers(0, m - max_stream + 1))
+            t1 = t0 + max_stream
+        plan.append(
+            (kt * rows, min((kt + 1) * rows, k), nt * cols, min((nt + 1) * cols, n), t0, t1)
+        )
+    return plan
+
+
+def _fused_importable() -> bool:
+    # ImportError only: a genuinely broken kernel package (bad refactor, jax
+    # API drift) must raise loudly, not silently degrade every profile to
+    # the slow numpy path.
+    try:
+        import repro.kernels.activity_profile.ops  # noqa: F401
+
+        return True
+    except ImportError:  # pragma: no cover - jax missing
+        return False
+
+
+def _warn_numpy_fallback(reason: str) -> None:
+    # warnings dedups by (message, location), so this surfaces once per run
+    warnings.warn(
+        f"profile_ws_gemm: fused engine unavailable ({reason}); using the "
+        "slow numpy oracle. Exact full-stream profiling is the default — "
+        "pass max_tiles/max_stream to bound large workloads.",
+        RuntimeWarning,
+        stacklevel=4,
+    )
+
+
+def _resolve_backend(
+    backend: str | None, a: np.ndarray, w: np.ndarray, rows: int
+) -> str:
+    backend = backend if backend is not None else DEFAULT_BACKEND
+    if backend == "auto":
+        if not _fused_importable():
+            _warn_numpy_fallback("jax not importable")
+            return "numpy"
+        from repro.kernels.activity_profile.ops import (
+            MAX_FUSED_K,
+            MAX_FUSED_ROWS,
+            operands_fit_fused,
+        )
+
+        if a.shape[1] + rows >= MAX_FUSED_K or rows >= MAX_FUSED_ROWS:
+            _warn_numpy_fallback("GEMM/array dims beyond fused-engine bounds")
+            return "numpy"
+        if not operands_fit_fused(a, w):
+            _warn_numpy_fallback("operands wider than int16")
+            return "numpy"
+        return "pallas"
+    if backend not in ("numpy", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+# --- content-keyed profile cache -------------------------------------------
+# Benchmarks and examples repeatedly profile the same synthetic layers; a
+# profile is a pure function of (operands, geometry, plan), so memoize on
+# content. Exact-mode keys ignore the seed (it only feeds the subsampler).
+
+_PROFILE_CACHE: OrderedDict[bytes, ActivityProfile] = OrderedDict()
+_PROFILE_CACHE_CAPACITY = 128
+_PROFILE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_profile_cache() -> None:
+    _PROFILE_CACHE.clear()
+    _PROFILE_CACHE_STATS["hits"] = 0
+    _PROFILE_CACHE_STATS["misses"] = 0
+
+
+def profile_cache_info() -> dict:
+    return {"size": len(_PROFILE_CACHE), **_PROFILE_CACHE_STATS}
+
+
+def _cache_key(
+    a: np.ndarray, w: np.ndarray, rows, cols, b_h, b_v, mode: tuple
+) -> bytes:
+    h = hashlib.sha256()
+    h.update(repr(("v2", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
+    for arr in (a, w):
+        # Hash a value-canonical representation: int16-range data (the
+        # common case) hashes at 2 bytes/element instead of the upcast 8,
+        # and equal values hit the same key regardless of input dtype.
+        if arr.size and -32768 <= int(arr.min()) and int(arr.max()) <= 32767:
+            arr = arr.astype(np.int16)
+        h.update(arr.dtype.str.encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.digest()
+
+
+def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
+    """The seed per-tile oracle loop (materializes (T, R, C) per tile)."""
+    h_num = v_num = 0.0
+    h_den = v_den = 0
+    for k0, k1, n0, n1, t0, t1 in plan:
+        ah, av, ht, vt = profile_ws_tile(a[t0:t1, k0:k1], w[k0:k1, n0:n1], b_h, b_v)
+        h_num += ah * ht
+        v_num += av * vt
+        h_den += ht
+        v_den += vt
+    a_h = h_num / h_den if h_den else 0.0
+    a_v = v_num / v_den if v_den else 0.0
+    return a_h, a_v, h_den, v_den
+
+
+def _profile_fused(
+    a, w, rows, cols, b_h, b_v, plan, exact: bool
+) -> tuple[float, float, int, int]:
+    """The fused engine: exact whole-GEMM grid, or per-plan-entry for opt-in
+    subsampling (each entry is a single-tile GEMM for the engine)."""
+    from repro.kernels.activity_profile.ops import ToggleCounts, profile_gemm_toggles
+
+    if exact:
+        counts = profile_gemm_toggles(a, w, rows, cols, b_h, b_v)
+    else:
+        counts = ToggleCounts(0, 0, 0, 0)
+        for k0, k1, n0, n1, t0, t1 in plan:
+            counts = counts + profile_gemm_toggles(
+                a[t0:t1, k0:k1], w[k0:k1, n0:n1], k1 - k0, n1 - n0, b_h, b_v
+            )
+    a_h, a_v = counts.activities(b_h, b_v)
+    return a_h, a_v, counts.h_transitions, counts.v_transitions
+
+
 def profile_ws_gemm(
     a: np.ndarray,
     w: np.ndarray,
@@ -162,17 +352,22 @@ def profile_ws_gemm(
     cols: int,
     b_h: int,
     b_v: int,
-    max_tiles: int | None = 16,
-    max_stream: int | None = 1024,
+    max_tiles: int | None = None,
+    max_stream: int | None = None,
     seed: int = 0,
+    *,
+    backend: str | None = None,
+    use_cache: bool = True,
 ) -> ActivityProfile:
     """Profile the full GEMM ``a @ w`` tiled onto an R x C WS systolic array.
 
     The GEMM (M, K) x (K, N) is tiled into ceil(K/rows) * ceil(N/cols) weight
-    tiles; each tile streams all M input rows. For tractability the profiler
-    subsamples ``max_tiles`` tiles and ``max_stream`` consecutive stream steps
-    per tile (consecutive — toggle statistics need adjacency), then averages
-    activities weighted by transition counts.
+    tiles; each tile streams all M input rows. By default the profile is
+    EXACT — every tile, every stream step (the fused engine makes this cheap;
+    see the module docstring). Pass ``max_tiles``/``max_stream`` to opt into
+    the legacy subsampled estimate (consecutive stream windows — toggle
+    statistics need adjacency); both backends then draw the identical
+    subsample from ``seed``.
     """
     a = np.asarray(a, dtype=np.int64)
     w = np.asarray(w, dtype=np.int64)
@@ -180,44 +375,66 @@ def profile_ws_gemm(
         raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
     m, k = a.shape
     _, n = w.shape
-    rng = np.random.default_rng(seed)
 
-    k_tiles = -(-k // rows)
-    n_tiles = -(-n // cols)
-    tile_ids = [(kt, nt) for kt in range(k_tiles) for nt in range(n_tiles)]
-    if max_tiles is not None and len(tile_ids) > max_tiles:
-        idx = rng.choice(len(tile_ids), size=max_tiles, replace=False)
-        tile_ids = [tile_ids[i] for i in sorted(idx)]
+    # "Effective" mode: subsampling limits that don't bind are exact.
+    total_tiles = (-(-k // rows)) * (-(-n // cols))
+    exact = not (
+        (max_tiles is not None and total_tiles > max_tiles)
+        or (max_stream is not None and m > max_stream)
+    )
+    mode: tuple = ("exact",) if exact else ("sub", max_tiles, max_stream, seed)
 
-    h_num = v_num = 0.0
-    h_den = v_den = 0
-    for kt, nt in tile_ids:
-        k0, k1 = kt * rows, min((kt + 1) * rows, k)
-        n0, n1 = nt * cols, min((nt + 1) * cols, n)
-        a_tile = a[:, k0:k1]
-        w_tile = w[k0:k1, n0:n1]
-        if max_stream is not None and m > max_stream:
-            start = int(rng.integers(0, m - max_stream + 1))
-            a_tile = a_tile[start : start + max_stream]
-        ah, av, ht, vt = profile_ws_tile(a_tile, w_tile, b_h, b_v)
-        h_num += ah * ht
-        v_num += av * vt
-        h_den += ht
-        v_den += vt
+    # Resolve the backend BEFORE the cache lookup and key on it: the two
+    # backends agree to float rounding, but an explicit backend= request
+    # (oracle cross-checks, timing) must never be served the other
+    # backend's result.
+    resolved = _resolve_backend(backend, a, w, rows)
 
-    return ActivityProfile(
-        a_h=h_num / h_den if h_den else 0.0,
-        a_v=v_num / v_den if v_den else 0.0,
+    key = None
+    if use_cache:
+        key = _cache_key(a, w, rows, cols, b_h, b_v, (resolved, *mode))
+        hit = _PROFILE_CACHE.get(key)
+        if hit is not None:
+            _PROFILE_CACHE_STATS["hits"] += 1
+            _PROFILE_CACHE.move_to_end(key)
+            return hit
+        _PROFILE_CACHE_STATS["misses"] += 1
+
+    plan = None
+    if not exact or resolved == "numpy":
+        plan = _tile_plan(m, k, n, rows, cols, max_tiles, max_stream, seed)
+    if resolved == "pallas":
+        a_h, a_v, h_den, v_den = _profile_fused(a, w, rows, cols, b_h, b_v, plan, exact)
+    else:
+        a_h, a_v, h_den, v_den = _profile_numpy(a, w, b_h, b_v, plan)
+
+    profile = ActivityProfile(
+        a_h=a_h,
+        a_v=a_v,
         b_h=b_h,
         b_v=b_v,
         h_transitions=h_den,
         v_transitions=v_den,
         input_zero_fraction=float(np.mean(a == 0)),
+        input_elements=int(a.size),
     )
+    if key is not None:
+        _PROFILE_CACHE[key] = profile
+        while len(_PROFILE_CACHE) > _PROFILE_CACHE_CAPACITY:
+            _PROFILE_CACHE.popitem(last=False)
+    return profile
 
 
 def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
-    """Transition-count-weighted average of several per-layer profiles."""
+    """Weighted average of several per-layer profiles.
+
+    Activities are transition-count-weighted; ``input_zero_fraction`` is
+    element-count-weighted (a 10-element layer must not count as much as a
+    10M-element one). If ANY profile lacks an element count
+    (``input_elements == 0``, e.g. hand-built), the zero fraction falls back
+    to an unweighted mean over all profiles — no profile is silently
+    dropped from it.
+    """
     profiles = list(profiles)
     if not profiles:
         raise ValueError("no profiles to combine")
@@ -226,7 +443,14 @@ def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
     v_den = sum(p.v_transitions for p in profiles)
     a_h = sum(p.a_h * p.h_transitions for p in profiles) / max(h_den, 1)
     a_v = sum(p.a_v * p.v_transitions for p in profiles) / max(v_den, 1)
-    zf = float(np.mean([p.input_zero_fraction for p in profiles]))
+    if all(p.input_elements > 0 for p in profiles):
+        elems = sum(p.input_elements for p in profiles)
+        zf = sum(p.input_zero_fraction * p.input_elements for p in profiles) / elems
+    else:
+        # Unweighted fallback: report elements as unknown (0) so a nested
+        # combine doesn't element-weight a fraction that never was.
+        elems = 0
+        zf = float(np.mean([p.input_zero_fraction for p in profiles]))
     return ActivityProfile(
         a_h=a_h,
         a_v=a_v,
@@ -234,5 +458,6 @@ def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
         b_v=b_v,
         h_transitions=h_den,
         v_transitions=v_den,
-        input_zero_fraction=zf,
+        input_zero_fraction=float(zf),
+        input_elements=elems,
     )

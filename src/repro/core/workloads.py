@@ -108,13 +108,20 @@ def profile_conv_layer(
     cols: int = 32,
     bits: int = 16,
     b_v: int | None = None,
-    max_tiles: int | None = 12,
-    max_stream: int | None = 512,
+    max_tiles: int | None = None,
+    max_stream: int | None = None,
     seed: int = 0,
+    backend: str | None = None,
+    use_cache: bool = True,
 ) -> ActivityProfile:
     """Quantize a synthetic instance of ``layer`` to int-``bits`` and profile it
     on an R x C WS array (the paper's Section IV methodology, with synthetic
-    ImageNet-statistics inputs)."""
+    ImageNet-statistics inputs).
+
+    Exact full-stream profile by default (fused engine); pass
+    ``max_tiles``/``max_stream`` to opt into the subsampled estimate.
+    Repeat calls hit the content-keyed profile cache.
+    """
     from repro.core.floorplan import accumulator_width
 
     g = conv_to_gemm(layer)
@@ -133,6 +140,8 @@ def profile_conv_layer(
         max_tiles=max_tiles,
         max_stream=max_stream,
         seed=seed,
+        backend=backend,
+        use_cache=use_cache,
     )
 
 

@@ -1,0 +1,2 @@
+"""activity_profile kernel package: fused single-pass WS switching profiler."""
+from repro.kernels.activity_profile.ops import *  # noqa: F401,F403

@@ -1,0 +1,237 @@
+"""Fused Pallas TPU kernel: single-pass WS switching-activity profiling.
+
+Replaces the host-side pipeline ``vertical_partial_sums`` (a materialized
+(T, R, C) int64 cumsum) + XOR-popcount with ONE kernel that, per
+``(weight_tile, t_block)`` grid cell:
+
+  1. streams a ``(block_t, R)`` activation block through the resident
+     ``(R, C)`` weight tile,
+  2. forms the running partial-sum cumsum down R **in-kernel** — carried as
+     lo/hi int32 planes so the paper's 37-bit accumulations stay exact
+     without 64-bit arithmetic (the VPU has none),
+  3. XORs each time step against its predecessor (the cross-block
+     predecessor lives in VMEM scratch, persistent across the sequential
+     grid), popcounts under the bus-width mask, and
+  4. accumulates toggle totals for BOTH the horizontal input buses and the
+     vertical partial-sum buses.
+
+The (T, R, C) partial-sum tensor therefore never exists anywhere — not in
+host memory, not in HBM; each element is produced, toggled against, and
+discarded inside one VMEM-resident block.
+
+Exact 64-bit partial sums from int32 lanes
+------------------------------------------
+For int16 operands every product fits int32. Split ``p = p_hi * 2^16 + p_lo``
+with ``p_lo = p & 0xffff`` (in [0, 2^16)) and ``p_hi = p >> 16`` (arithmetic,
+in [-2^15, 2^15)). Both planes cumsum exactly in int32 for any realistic R
+(R < 2^15), and ``S = Hc * 2^16 + Lc`` is reconstructed mod 2^64 as
+``(s_lo, s_hi)`` int32 planes with one unsigned-compare carry. Bus toggles on
+a ``bits``-wide two's-complement bus are then popcounts of the XORed planes
+under a static (lo_mask, hi_mask) split — exact for bits in [1, 64].
+
+The same jnp helpers below are shared by the jitted XLA fallback in ops.py
+(used when no TPU is attached), so both engines are one algorithm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bitops import popcount_u32 as _popcount_u32
+
+# Upper bound on block_t * rows * cols (elements of one in-flight plane).
+# Keeps every temporary comfortably inside VMEM and bounds each grid cell's
+# toggle partial at ~2^26 * 96 bits, far below int32 overflow.
+DEFAULT_BLOCK_BUDGET = 1 << 20
+MAX_BLOCK_T = 512
+MIN_BLOCK_T = 8
+
+__all__ = [
+    "DEFAULT_BLOCK_BUDGET",
+    "choose_block_t",
+    "bus_masks",
+    "partial_sum_planes",
+    "planes_toggles",
+    "value32_toggles",
+    "activity_profile_pallas",
+]
+
+
+def choose_block_t(rows: int, cols: int, budget: int = DEFAULT_BLOCK_BUDGET) -> int:
+    """Time-block size: as many steps as the element budget allows, 8-aligned."""
+    bt = budget // max(rows * cols, 1)
+    bt = max(MIN_BLOCK_T, min(MAX_BLOCK_T, bt))
+    return bt - (bt % MIN_BLOCK_T)
+
+
+def bus_masks(bits: int) -> tuple[int, int]:
+    """(lo_mask, hi_mask) selecting the low ``bits`` of a 64-bit lo/hi pair."""
+    if not 1 <= bits <= 64:
+        raise ValueError("bus width must be in [1, 64]")
+    if bits >= 64:
+        return 0xFFFFFFFF, 0xFFFFFFFF
+    if bits >= 32:
+        return 0xFFFFFFFF, (1 << (bits - 32)) - 1
+    return (1 << bits) - 1, 0
+
+
+def partial_sum_planes(
+    a_block: jnp.ndarray, w_tile: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact 64-bit WS partial sums S[t, r, c] = sum_{r'<=r} a[t,r']*w[r',c].
+
+    ``a_block`` is (BT, R) int32, ``w_tile`` is (R, C) int32; products must
+    fit int32 (guaranteed for int16-range operands). Returns (s_lo, s_hi)
+    int32 planes holding S mod 2^64.
+    """
+    p = a_block[:, :, None] * w_tile[None, :, :]
+    p_lo = p & jnp.int32(0xFFFF)
+    p_hi = p >> jnp.int32(16)  # arithmetic: p == p_hi * 2^16 + p_lo exactly
+    acc_lo = jnp.cumsum(p_lo, axis=1)  # <= R * 0xffff, exact in int32
+    acc_hi = jnp.cumsum(p_hi, axis=1)  # |.| <= R * 2^15, exact in int32
+    # Reconstruct acc_hi * 2^16 + acc_lo as 64-bit lo/hi planes (mod 2^64).
+    shifted = acc_hi << jnp.int32(16)
+    s_lo = shifted + acc_lo
+    carry = (s_lo.astype(jnp.uint32) < shifted.astype(jnp.uint32)).astype(jnp.int32)
+    s_hi = (acc_hi >> jnp.int32(16)) + carry
+    return s_lo, s_hi
+
+
+def planes_toggles(
+    s_lo: jnp.ndarray,
+    s_hi: jnp.ndarray,
+    p_lo: jnp.ndarray,
+    p_hi: jnp.ndarray,
+    bits: int,
+) -> jnp.ndarray:
+    """Per-element bit flips between two lo/hi-plane values on a ``bits`` bus."""
+    lo_m, hi_m = bus_masks(bits)
+    cnt = _popcount_u32((s_lo ^ p_lo).astype(jnp.uint32) & jnp.uint32(lo_m))
+    if hi_m:
+        cnt = cnt + _popcount_u32((s_hi ^ p_hi).astype(jnp.uint32) & jnp.uint32(hi_m))
+    return cnt.astype(jnp.int32)
+
+
+def value32_toggles(cur: jnp.ndarray, prev: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Bit flips between int32 values on a ``bits``-wide two's-complement bus.
+
+    For bits > 32 the bus bits above 31 are sign-extension copies: they all
+    flip together iff the sign bit flips.
+    """
+    x = cur ^ prev
+    if bits <= 32:
+        lo_m, _ = bus_masks(bits)
+        return _popcount_u32(x.astype(jnp.uint32) & jnp.uint32(lo_m)).astype(jnp.int32)
+    base = _popcount_u32(x.astype(jnp.uint32)).astype(jnp.int32)
+    sign_flip = (x >> jnp.int32(31)) & jnp.int32(1)
+    return base + sign_flip * jnp.int32(bits - 32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rows", "cols", "k", "n", "b_h", "b_v", "block_t", "interpret",
+    ),
+)
+def activity_profile_pallas(
+    a_pad: jnp.ndarray,
+    w_pad: jnp.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    k: int,
+    n: int,
+    b_h: int,
+    b_v: int,
+    block_t: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused toggle totals for every weight tile of a WS GEMM, in one pass.
+
+    ``a_pad`` is (T_pad, K_pad) int32 — T edge-padded (replicated last row:
+    zero extra toggles), K zero-padded to a multiple of ``rows``. ``w_pad``
+    is (K_pad, N_pad) int32, zero-padded. ``k``/``n`` are the true (unpadded)
+    GEMM dims; edge tiles mask their padding lanes out of the counts, so
+    totals are bit-exact vs. the unpadded numpy oracle.
+
+    Returns per-grid-cell int32 partials ``(h_out, v_out)`` of shape
+    (num_tiles, num_t_blocks); the caller reduces them in int64. Each cell's
+    count is bounded by block_t*rows*cols*(64+b_h) < 2^31 via choose_block_t.
+    """
+    t_pad, k_pad = a_pad.shape
+    n_pad = w_pad.shape[1]
+    if t_pad % block_t or k_pad % rows or n_pad % cols:
+        raise ValueError(
+            f"padded shapes {(t_pad, k_pad, n_pad)} not multiples of "
+            f"{(block_t, rows, cols)}"
+        )
+    k_tiles = k_pad // rows
+    n_tiles = n_pad // cols
+    num_tiles = k_tiles * n_tiles
+    num_tb = t_pad // block_t
+
+    def kernel(a_ref, w_ref, h_ref, v_ref, prev_lo, prev_hi, prev_a):
+        p = pl.program_id(0)
+        j = pl.program_id(1)
+        a = a_ref[...]  # (block_t, rows)
+        w = w_ref[...]  # (rows, cols)
+        s_lo, s_hi = partial_sum_planes(a, w)
+
+        # First t-block of a tile: seed the carry with t=0 so the (nonexistent)
+        # transition into the first time step contributes zero toggles.
+        @pl.when(j == 0)
+        def _():
+            prev_lo[...] = s_lo[0]
+            prev_hi[...] = s_hi[0]
+            prev_a[...] = a[:1]
+
+        lag_lo = jnp.concatenate([prev_lo[...][None], s_lo[:-1]], axis=0)
+        lag_hi = jnp.concatenate([prev_hi[...][None], s_hi[:-1]], axis=0)
+        lag_a = jnp.concatenate([prev_a[...], a[:-1]], axis=0)
+
+        # Edge tiles: mask PEs beyond the true K/N extent out of the counts.
+        kt = p // n_tiles
+        nt = p % n_tiles
+        valid_r = jnp.minimum(rows, k - kt * rows)
+        valid_c = jnp.minimum(cols, n - nt * cols)
+        rid = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0)
+        cid = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+        vmask = (rid < valid_r) & (cid < valid_c)
+        hmask = jax.lax.broadcasted_iota(jnp.int32, (1, rows), 1) < valid_r
+
+        v_cnt = planes_toggles(s_lo, s_hi, lag_lo, lag_hi, b_v)
+        h_cnt = value32_toggles(a, lag_a, b_h)
+        v_ref[0, 0] = jnp.sum(jnp.where(vmask[None, :, :], v_cnt, 0))
+        h_ref[0, 0] = jnp.sum(jnp.where(hmask, h_cnt, 0))
+
+        prev_lo[...] = s_lo[-1]
+        prev_hi[...] = s_hi[-1]
+        prev_a[...] = a[-1:]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles, num_tb),
+        in_specs=[
+            pl.BlockSpec((block_t, rows), lambda p, j: (j, p // n_tiles)),
+            pl.BlockSpec((rows, cols), lambda p, j: (p // n_tiles, p % n_tiles)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, j: (p, j)),
+            pl.BlockSpec((1, 1), lambda p, j: (p, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_tiles, num_tb), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, num_tb), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, cols), jnp.int32),
+            pltpu.VMEM((rows, cols), jnp.int32),
+            pltpu.VMEM((1, rows), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_pad, w_pad)

@@ -1,0 +1,19 @@
+"""Shared bit-manipulation primitives for the kernel packages."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["popcount_u32"]
+
+
+def popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount for uint32 lanes (no popc instruction on the TPU VPU).
+
+    Used inside Pallas kernels and jitted XLA programs alike; exact for any
+    uint32 input.
+    """
+    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> jnp.uint32(24)

@@ -17,16 +17,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.bitops import popcount_u32 as _popcount_u32
+
 DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_L = 128
-
-
-def _popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
-    """SWAR popcount for uint32 lanes (no popc instruction needed on the VPU)."""
-    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
-    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
-    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
-    return (v * jnp.uint32(0x01010101)) >> jnp.uint32(24)
 
 
 def _toggle_kernel(cur_ref, nxt_ref, out_ref):

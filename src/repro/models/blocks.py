@@ -306,7 +306,10 @@ def moe_apply(p, x, cfg, dropless: bool = False) -> tuple[jnp.ndarray, jnp.ndarr
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    shard_map = jax.shard_map
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:  # jax < 0.5 ships it under experimental
+        from jax.experimental.shard_map import shard_map
 
     from repro.parallel.sharding import active_act_rules, active_mesh
 

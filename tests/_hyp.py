@@ -1,0 +1,47 @@
+"""Graceful degradation when ``hypothesis`` isn't installed.
+
+hypothesis is an OPTIONAL test dependency (``pip install -e .[test]``
+brings it in). On a bare environment the seed suite used to die at
+collection with ModuleNotFoundError; importing ``given``/``settings``/``st``
+from this shim instead keeps every non-property test running and turns each
+property test into a single skipped item (the importorskip outcome, scoped
+to just the tests that actually need hypothesis).
+"""
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare envs only
+    HAVE_HYPOTHESIS = False
+
+    def assume(condition):  # noqa: ARG001
+        return True
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[test])")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for ``st``: strategy constructors are evaluated at module
+        import (decorator arguments), so every attribute must be callable and
+        accept anything."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -1,8 +1,7 @@
 """Calibrated energy model: reproduces the paper's headline numbers."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.energy import (
     EnergyModelConfig,

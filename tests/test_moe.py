@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs.registry import get_arch
 from repro.models.blocks import _combine_local, _dispatch_local, moe_apply, moe_init

@@ -71,8 +71,7 @@ def test_no_mesh_axis_used_twice():
     assert len(flat) == len(set(flat))
 
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 _AXIS_NAMES = [
     "batch", "seq", "embed", "heads", "kv_heads", "mlp", "experts",
