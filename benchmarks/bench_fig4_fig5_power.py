@@ -19,7 +19,7 @@ import time
 from repro.core.energy import average_comparison, compare_sym_asym
 from repro.core.floorplan import BusActivity, SystolicArrayGeometry
 from repro.core.switching import combine_profiles
-from repro.core.workloads import RESNET50_TABLE1, profile_conv_layer
+from repro.core.workloads import RESNET50_TABLE1, profile_network
 
 from benchmarks import SMOKE_SUBSAMPLE
 
@@ -32,10 +32,9 @@ def _simulated_profiles(smoke: bool = False):
     # use_cache=False: this call is TIMED (us/profile below). With the cache
     # on, bench_table1_layers (which runs first under benchmarks.run) would
     # have populated identical keys and we'd be measuring sha256 lookups.
-    return [
-        profile_conv_layer(layer, seed=i, use_cache=False, **kwargs)
-        for i, layer in enumerate(RESNET50_TABLE1)
-    ]
+    # Exact mode rides the batched network pipeline (one fused program per
+    # shape class); smoke keeps the seed's subsampled per-layer estimate.
+    return profile_network(RESNET50_TABLE1, use_cache=False, **kwargs)
 
 
 def run(smoke: bool = False) -> list[dict]:

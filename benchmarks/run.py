@@ -20,6 +20,7 @@ from benchmarks import (
     bench_fig4_fig5_power,
     bench_kernels,
     bench_mxu_scale,
+    bench_network_profile,
     bench_table1_layers,
 )
 
@@ -31,6 +32,7 @@ MODULES = [
     ("design_space", bench_design_space),
     ("kernels", bench_kernels),
     ("activity_profile", bench_activity_profile),
+    ("network_profile", bench_network_profile),
 ]
 
 

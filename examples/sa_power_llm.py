@@ -2,10 +2,13 @@
 era — per-architecture GEMM sets (all 10 assigned archs) streamed through an
 int8 128x128 inference array, with per-arch activity profiles and savings.
 
+Every architecture's whole GEMM set is ONE batched pipeline call (a couple
+of fused device programs, content-deduped, cached); the per-arch calls
+share one process-wide jit cache because all jobs land in the same padded
+shape class.
+
     PYTHONPATH=src python examples/sa_power_llm.py
 """
-
-import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_arch
 from repro.core.energy import compare_sym_asym
@@ -15,35 +18,27 @@ from repro.core.floorplan import (
     accumulator_width,
     optimal_aspect_power,
 )
-from repro.core.quant import quantize_symmetric
-from repro.core.switching import combine_profiles, profile_ws_gemm
-from repro.core.workloads import gemms_for_arch
+from repro.core.switching import combine_profiles, profile_ws_gemms
+from repro.core.workloads import gemm_job, gemms_for_arch
 
 ROWS = COLS = 128
 BITS = 8
 geom = SystolicArrayGeometry(
     rows=ROWS, cols=COLS, b_h=BITS, b_v=accumulator_width(BITS, ROWS), pe_area_um2=400.0
 )
-rng = np.random.default_rng(0)
 
 print(f"int8 {ROWS}x{COLS} WS array: B_h={geom.b_h}, B_v={geom.b_v}\n")
 print(f"{'arch':26s} {'#GEMMs':>6s} {'a_h':>6s} {'a_v':>6s} {'W/H*':>6s} {'int.save':>9s}")
 
-for arch in ARCH_IDS:
+for seed_base, arch in enumerate(ARCH_IDS):
     cfg = get_arch(arch)
     gemms = gemms_for_arch(cfg, seq_len=64, batch=1)
-    profiles = []
-    for g in gemms[:5]:  # profile the distinct per-layer GEMMs
-        m = min(g.m, 128)
-        k = min(g.k, 512)
-        n = min(g.n, 256)
-        a_f = np.maximum(rng.normal(0, 1, size=(m, k)), 0)  # post-activation
-        w_f = rng.normal(0, 1 / np.sqrt(k), size=(k, n))
-        a_q = quantize_symmetric(a_f, BITS).values
-        w_q = quantize_symmetric(w_f, BITS).values
-        # exact full-stream profile (fused engine); identical layers across
-        # runs hit the content-keyed cache
-        profiles.append(profile_ws_gemm(a_q, w_q, ROWS, COLS, geom.b_h, geom.b_v))
+    # profile the distinct per-layer GEMMs, one batched call per arch
+    jobs = [
+        gemm_job(g, rows=ROWS, cols=COLS, bits=BITS, seed=100 * seed_base + i)
+        for i, g in enumerate(gemms[:5])
+    ]
+    profiles = profile_ws_gemms(jobs)
     avg = combine_profiles(profiles)
     act = BusActivity(a_h=min(avg.a_h, 1.0), a_v=min(avg.a_v, 1.0))
     c = compare_sym_asym(geom, act)

@@ -9,16 +9,19 @@ from repro.core.energy import average_comparison, compare_sym_asym
 from repro.core.floorplan import BusActivity, SystolicArrayGeometry, optimal_aspect_power
 from repro.core.switching import combine_profiles, profile_cache_info
 from repro.core.systolic import schedule_gemm
-from repro.core.workloads import RESNET50_TABLE1, conv_to_gemm, profile_conv_layer
+from repro.core.workloads import RESNET50_TABLE1, conv_to_gemm, profile_network
 
 geom = SystolicArrayGeometry.paper_32x32()
 
 print("profiling Table-I layers on the 32x32 WS array (int16)...")
-print("(exact full-stream profiles via the fused activity engine; cached)")
-profiles = []
-for i, layer in enumerate(RESNET50_TABLE1):
-    p = profile_conv_layer(layer, seed=i)
-    profiles.append(p)
+print("(one batched pipeline call: exact full-stream profiles, a couple of")
+print(" fused device programs for the whole network; cached)")
+profiles, stats = profile_network(RESNET50_TABLE1, return_stats=True)
+print(
+    f"  scheduler: {stats.buckets} device program(s), {stats.tasks} tasks, "
+    f"{stats.cache_hits} cache hits"
+)
+for layer, p in zip(RESNET50_TABLE1, profiles):
     g = conv_to_gemm(layer)
     s = schedule_gemm(g.m, g.k, g.n, 32, 32)
     print(

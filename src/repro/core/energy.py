@@ -40,6 +40,7 @@ __all__ = [
     "PowerBreakdown",
     "power_breakdown",
     "compare_sym_asym",
+    "average_comparison",
     "SymAsymComparison",
 ]
 

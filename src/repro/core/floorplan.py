@@ -33,6 +33,7 @@ __all__ = [
     "bus_power_ratio_vs_square",
     "golden_section_minimize",
     "numeric_optimal_aspect",
+    "sweep_aspects",
     "accumulator_width",
 ]
 

@@ -1,0 +1,529 @@
+"""Batched network-level profiling pipeline: jobs in, a few device programs out.
+
+The per-GEMM entry point (``profile_ws_gemm``) is fast *per call* but every
+network-scale consumer used to drive it one GEMM at a time — paying a
+host-side operand synthesis, a fresh pad, a host→device copy, a
+shape-specialized recompile (~2s on CPU, twice per distinct shape) and a
+blocking device round-trip per layer. This module turns a LIST of profiling
+jobs into a handful of fused device programs:
+
+  1. **Dedup** — each job is checked against the content-keyed profile cache
+     first; identical (operands, geometry) pairs inside one batch, and the
+     same operands profiled across several (rows, cols) geometries, share a
+     single device pass (``a``'s horizontal toggles are geometry-independent
+     up to ceil(N/cols) scaling, and the vertical totals depend on ``rows``
+     but not ``cols`` — tiling the columns differently regroups, never
+     changes, the per-column partial-sum streams).
+  2. **Bucketing** — schedulable jobs are grouped into a small set of padded
+     shape classes: same (rows, cols, b_h, b_v) and time extents rounded up
+     to a shared power-of-two block count (≤2x T padding, count-neutral).
+     Each bucket is ONE stacked-tile device program regardless of how many
+     GEMMs or how ragged their K/N are (tiles, not jobs, are the batch
+     axis — see ``repro.kernels.activity_profile.batch``).
+  3. **Async dispatch** — bucket i's program is dispatched without blocking
+     (jax async dispatch), so the device crunches while the host synthesizes
+     and quantizes bucket i+1's operands; results are pulled only in the
+     final collection phase.
+
+Counts are bit-exact vs per-job ``profile_ws_gemm`` (and the numpy oracle);
+jobs the fused engine cannot take (operands beyond int16 range, degenerate
+shapes, K/rows beyond the engine bounds, or an explicit numpy backend) fall
+back to the serial path per job and are reported in ``BatchStats``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.switching import (
+    ActivityProfile,
+    _cache_get,
+    _cache_key,
+    _cache_put,
+    _operand_digest,
+    _resolve_backend,
+    DEFAULT_BACKEND,
+    profile_ws_gemm,
+)
+
+__all__ = [
+    "ProfileJob",
+    "BatchStats",
+    "run_profile_batch",
+]
+
+
+@dataclasses.dataclass
+class ProfileJob:
+    """One GEMM-on-array profiling request.
+
+    Operands come either eagerly (``a``/``w``) or lazily (``make`` returning
+    ``(a, w)`` plus the declared ``shape=(m, k, n)``) — lazy jobs let the
+    pipeline overlap operand synthesis with device work, and let bucket
+    planning see shapes without materializing anything.
+    """
+
+    rows: int
+    cols: int
+    b_h: int
+    b_v: int
+    a: np.ndarray | None = None
+    w: np.ndarray | None = None
+    make: Callable[[], tuple[np.ndarray, np.ndarray]] | None = None
+    shape: tuple[int, int, int] | None = None
+    name: str = ""
+
+    def gemm_shape(self) -> tuple[int, int, int]:
+        """(M, K, N) without materializing lazy operands."""
+        if self.a is not None and self.w is not None:
+            return (self.a.shape[0], self.a.shape[1], self.w.shape[1])
+        if self.shape is None:
+            raise ValueError(f"lazy job {self.name!r} needs shape=(m, k, n)")
+        return tuple(self.shape)
+
+    def operands(self) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize (and keep) int64 operands, validated against shape."""
+        if self.a is None or self.w is None:
+            if self.make is None:
+                raise ValueError(f"job {self.name!r} has neither operands nor make")
+            a, w = self.make()
+            self.a, self.w = np.asarray(a), np.asarray(w)
+        a = np.asarray(self.a, dtype=np.int64)
+        w = np.asarray(self.w, dtype=np.int64)
+        if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+            raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
+        declared = (a.shape[0], a.shape[1], w.shape[1])
+        if self.shape is not None and tuple(self.shape) != declared:
+            raise ValueError(
+                f"job {self.name!r}: declared shape {tuple(self.shape)} != "
+                f"materialized {declared}"
+            )
+        self.a, self.w = a, w
+        return a, w
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """What the scheduler actually did (regression-tested invariants)."""
+
+    jobs: int = 0
+    cache_hits: int = 0
+    passes: int = 0  # device operand-passes scheduled (strips + tiles)
+    pass_reuse: int = 0  # jobs served by an already-scheduled pass
+    buckets: int = 0  # padded shape classes == fused programs dispatched
+    serial_fallbacks: int = 0
+    tasks: int = 0  # stacked (tile, segment) device tasks across all buckets
+    strips: int = 0  # stacked seeded stream windows across all buckets
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Pass:
+    """One scheduled (a, w, rows) device pass inside a bucket."""
+
+    bucket: int
+    strip_lo: int
+    strip_hi: int
+    tile_lo: int
+    tile_hi: int
+    h_total: int | None = None
+    v_total: int | None = None
+
+
+@dataclasses.dataclass
+class _Bucket:
+    rows: int
+    cols: int
+    b_h: int
+    b_v: int
+    t_seg: int
+    strips: list = dataclasses.field(default_factory=list)
+    w_tiles: list = dataclasses.field(default_factory=list)
+    strip_ids: list = dataclasses.field(default_factory=list)
+    w_ids: list = dataclasses.field(default_factory=list)
+    valid_r: list = dataclasses.field(default_factory=list)
+    future: object | None = None  # -> (h_parts, v_parts, num_tasks) handles
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+# Segment-length ceiling. 128 keeps the per-lane scan state (t_seg + 1,
+# cols) cache-resident AND collapses every stream longer than one segment
+# into the same shape class — short and long layers of one geometry share a
+# single compiled program (tail rounding stays <= 2x and count-neutral).
+MAX_SEG_T = 128
+
+
+def _bucket_key(job: ProfileJob) -> tuple:
+    """Padded shape class: geometry + bus widths + pow2 segment length.
+
+    ``t_seg`` is the segment ceiling (bounded further by the VMEM block
+    budget for huge geometries) capped to the job's own stream length
+    rounded up to a power of two — so short-stream jobs don't pad to the
+    long-stream class and a whole workload collapses into a couple of
+    program shapes.
+    """
+    from repro.kernels.activity_profile.kernel import choose_block_t
+
+    m, _, _ = job.gemm_shape()
+    t_seg = min(
+        MAX_SEG_T,
+        choose_block_t(job.rows, job.cols),
+        _next_pow2(max(1, -(-m // 8))) * 8,
+    )
+    return (job.rows, job.cols, job.b_h, job.b_v, t_seg)
+
+
+def _fused_eligible(job: ProfileJob, a: np.ndarray, w: np.ndarray) -> bool:
+    """Mirror of profile_gemm_toggles' contract checks (raise-free)."""
+    from repro.kernels.activity_profile.ops import (
+        MAX_FUSED_K,
+        MAX_FUSED_ROWS,
+        operands_fit_fused,
+    )
+
+    m, k, n = job.gemm_shape()
+    if m < 2 or k == 0 or n == 0:
+        return False  # zero transitions: serial path returns zeros instantly
+    if k + job.rows >= MAX_FUSED_K or job.rows >= MAX_FUSED_ROWS:
+        return False
+    return operands_fit_fused(a, w)
+
+
+def _schedule_job(job, a, w, t_trim, bucket_map, buckets, pass_map, stats):
+    """Attach one job to a (possibly shared) device pass, creating buckets
+    and stacking segment strips / weight tiles / tasks as needed. Returns
+    the job's pass key. ``t_trim`` caps the bucket's segment length at the
+    class's actual longest stream (8-aligned) so short-stream classes don't
+    compute their pow2 rounding."""
+    from repro.kernels.activity_profile.batch import segment_strips
+
+    m, k, n = job.gemm_shape()
+    # Shapes are part of the key: digests hash raw bytes, and the same bytes
+    # reshaped to a different (M, K)/(K, N) are a different stream.
+    pass_key = (
+        _operand_digest(a), _operand_digest(w), (m, k, n),
+        job.rows, job.b_h, job.b_v,
+    )
+    if pass_key in pass_map:
+        stats.pass_reuse += 1
+        return pass_key
+
+    bkey = _bucket_key(job)
+    if bkey not in bucket_map:
+        bucket_map[bkey] = len(buckets)
+        buckets.append(
+            _Bucket(job.rows, job.cols, job.b_h, job.b_v, min(bkey[-1], t_trim))
+        )
+    bidx = bucket_map[bkey]
+    bucket = buckets[bidx]
+    rows, cols = job.rows, job.cols
+
+    strip_lo = len(bucket.strips)
+    bucket.strips.extend(segment_strips(a, rows, bucket.t_seg))
+    n_seg = (len(bucket.strips) - strip_lo) // (-(-k // rows))
+
+    pk = (-k) % rows
+    pn = (-n) % cols
+    w_pad = np.pad(w.astype(np.int32), ((0, pk), (0, pn)))
+    k_tiles = -(-k // rows)
+    n_tiles = -(-n // cols)
+    w_lo = len(bucket.w_tiles)
+    for kt in range(k_tiles):
+        for nt in range(n_tiles):
+            bucket.w_tiles.append(
+                np.ascontiguousarray(
+                    w_pad[kt * rows : (kt + 1) * rows, nt * cols : (nt + 1) * cols]
+                )
+            )
+    task_lo = len(bucket.strip_ids)
+    for kt in range(k_tiles):
+        vr = min(rows, k - kt * rows)
+        for nt in range(n_tiles):
+            for s in range(n_seg):
+                bucket.strip_ids.append(strip_lo + kt * n_seg + s)
+                bucket.w_ids.append(w_lo + kt * n_tiles + nt)
+                bucket.valid_r.append(vr)
+    pass_map[pass_key] = _Pass(
+        bidx, strip_lo, len(bucket.strips), task_lo, len(bucket.strip_ids)
+    )
+    stats.passes += 1
+    return pass_key
+
+
+def run_profile_batch(
+    jobs: Sequence[ProfileJob],
+    *,
+    backend: str | None = None,
+    engine: str = "auto",
+    interpret: bool = False,
+    use_cache: bool = True,
+) -> tuple[list[ActivityProfile], BatchStats]:
+    """Profile every job; returns (profiles in input order, scheduler stats).
+
+    ``backend`` follows ``profile_ws_gemm``: ``"numpy"`` runs the serial
+    oracle per job (no device work at all); ``"pallas"``/``"auto"`` run the
+    batched fused pipeline with per-job fallback to serial for operands the
+    engine cannot take. ``engine``/``interpret`` pick the device rendering
+    (Pallas kernel on TPU, XLA elsewhere) exactly like the per-GEMM engine.
+    """
+    from repro.kernels.activity_profile.batch import (
+        bucket_toggle_parts,
+        reduce_bucket_parts,
+    )
+    from repro.kernels.activity_profile.ops import ToggleCounts
+
+    jobs = list(jobs)
+    stats = BatchStats(jobs=len(jobs))
+    requested = backend if backend is not None else DEFAULT_BACKEND
+
+    if requested == "numpy":
+        # Serial oracle per job: no jax import, no device or thread work at
+        # all (the docstring's contract for numpy-only callers).
+        stats.serial_fallbacks = len(jobs)
+        profiles = []
+        for job in jobs:
+            a, w = job.operands()
+            profiles.append(
+                profile_ws_gemm(
+                    a, w, job.rows, job.cols, job.b_h, job.b_v,
+                    backend="numpy", use_cache=use_cache,
+                )
+            )
+        return profiles, stats
+
+    # resolution[i]: ("cache", profile) | ("pass", key) | ("serial", backend)
+    resolution: list[tuple] = [None] * len(jobs)
+    bucket_map: dict[tuple, int] = {}
+    buckets: list[_Bucket] = []
+    pass_map: dict[tuple, _Pass] = {}
+
+    # Group by shape class first (shapes are declared, operands still lazy),
+    # then materialize + dispatch bucket by bucket: while bucket i compiles
+    # (worker thread) and computes on-device, the main thread synthesizes
+    # bucket i+1's operands.
+    order: dict[tuple, list[int]] = {}
+    for i, job in enumerate(jobs):
+        order.setdefault(_bucket_key(job), []).append(i)
+
+    # Device fan-out: each bucket's TASK axis is sharded across the local
+    # devices (contiguous slices, padded to one shared shape class so every
+    # shard reuses the same compiled program) and the shards execute
+    # genuinely in parallel — on TPU pods, or on CPU hosts running with
+    # ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. The serial
+    # per-GEMM path cannot do this: it blocks on every layer's result.
+    try:
+        import jax
+
+        devices = jax.local_devices()
+    except Exception:  # pragma: no cover - jax import already vetted upstream
+        devices = [None]
+
+    executor = ThreadPoolExecutor(max_workers=max(2, len(devices)))
+
+    def _submit_bucket(b: _Bucket) -> list:
+        """One executor task per shard: shard compiles (each device binding
+        compiles its own executable) and executions all run concurrently."""
+        strips = np.stack(b.strips)
+        w_tiles = np.stack(b.w_tiles)
+        ids = np.asarray(b.strip_ids, np.int32)
+        wids = np.asarray(b.w_ids, np.int32)
+        vr = np.asarray(b.valid_r, np.int32)
+        n_shards = min(len(devices), max(1, len(ids) // 64))
+        kw = dict(
+            rows=b.rows, cols=b.cols, b_h=b.b_h, b_v=b.b_v,
+            engine=engine, interpret=interpret,
+        )
+        if n_shards == 1:
+            return [executor.submit(bucket_toggle_parts, strips, w_tiles,
+                                    ids, wids, vr, **kw)]
+        # Equal-length slices (tail padded with valid_r=0 dummies that count
+        # zero) so every shard lowers the same program shape. Only shard 0's
+        # h_parts are used at collection — h is per-strip and every shard
+        # sees the full strips array.
+        per = -(-len(ids) // n_shards)
+        pad = n_shards * per - len(ids)
+        if pad:
+            zeros = np.zeros(pad, np.int32)
+            ids = np.concatenate([ids, zeros])
+            wids = np.concatenate([wids, zeros])
+            vr = np.concatenate([vr, zeros])
+        return [
+            executor.submit(
+                bucket_toggle_parts, strips, w_tiles,
+                ids[s * per : (s + 1) * per],
+                wids[s * per : (s + 1) * per],
+                vr[s * per : (s + 1) * per],
+                device=devices[s % len(devices)],
+                **kw,
+            )
+            for s in range(n_shards)
+        ]
+    prefetch_pool = ThreadPoolExecutor(max_workers=1)
+    try:
+        if devices != [None]:
+            # Pay the one-time XLA/LLVM backend spin-up concurrently with
+            # the first bucket's operand synthesis instead of inside its
+            # (timed) first compile.
+            import jax.numpy as jnp
+
+            executor.submit(jax.jit(lambda x: x + 1), jnp.zeros(8, jnp.int32))
+
+        # Materialize lazy operands a bounded window ahead on a side thread
+        # (numpy synthesis releases the GIL), in the same order the group
+        # loop consumes them — the window keeps host memory at a few jobs'
+        # operands, not the whole workload's.
+        consume_order = [i for members in order.values() for i in members]
+        prefetched: dict[int, object] = {}
+        window = 3
+
+        def _advance_prefetch():
+            while consume_order and len(prefetched) < window:
+                nxt = consume_order.pop(0)
+                prefetched[nxt] = prefetch_pool.submit(jobs[nxt].operands)
+
+        _advance_prefetch()
+
+        for bkey, members in order.items():
+            t_trim = max(
+                -(-jobs[i].gemm_shape()[0] // 8) * 8 for i in members
+            )
+            for i in members:
+                job = jobs[i]
+                a, w = prefetched.pop(i).result()
+                _advance_prefetch()
+                resolved = _resolve_backend(backend, a, w, job.rows)
+                if use_cache:
+                    key = _cache_key(
+                        a, w, job.rows, job.cols, job.b_h, job.b_v, (resolved, "exact")
+                    )
+                    hit = _cache_get(key)
+                    if hit is not None:
+                        resolution[i] = ("cache", hit)
+                        stats.cache_hits += 1
+                        continue
+                if resolved == "numpy" or not _fused_eligible(job, a, w):
+                    if requested == "pallas" and resolved != "numpy":
+                        # match profile_ws_gemm(backend="pallas"): loud
+                        # contract failure instead of a silent oracle detour
+                        from repro.kernels.activity_profile.ops import (
+                            profile_gemm_toggles,
+                        )
+
+                        profile_gemm_toggles(
+                            a, w, job.rows, job.cols, job.b_h, job.b_v
+                        )
+                    resolution[i] = ("serial", resolved)
+                    stats.serial_fallbacks += 1
+                    continue
+                key = _schedule_job(
+                    job, a, w, t_trim, bucket_map, buckets, pass_map, stats
+                )
+                # Record the operand statistics (and the content-cache store
+                # key) now and release lazy jobs' operands: the device holds
+                # the (int32) strip copies, so keeping every job's int64
+                # operands alive until collection would scale host memory
+                # with the whole workload.
+                store_key = (
+                    _cache_key(
+                        a, w, job.rows, job.cols, job.b_h, job.b_v,
+                        ("pallas", "exact"),
+                    )
+                    if use_cache
+                    else None
+                )
+                resolution[i] = (
+                    "pass",
+                    (key, float(np.mean(a == 0)), int(a.size), store_key),
+                )
+                if job.make is not None:
+                    job.a = job.w = None
+            # Hand every program this shape class produced to a worker:
+            # stacking + compile + async device dispatch happen off-thread.
+            for bidx in {pass_map[r[1][0]].bucket for j in members
+                         if (r := resolution[j])[0] == "pass"}:
+                b = buckets[bidx]
+                if b.future is None and b.strip_ids:
+                    b.future = _submit_bucket(b)
+
+        stats.buckets = len(buckets)
+        stats.tasks = sum(len(b.strip_ids) for b in buckets)
+        stats.strips = sum(len(b.strips) for b in buckets)
+
+        # Collection: block on each bucket once, fold per-pass totals.
+        # Sharded buckets: h comes from shard 0 (identical in all shards),
+        # v concatenates the contiguous task slices back together.
+        reduced = []
+        for b in buckets:
+            if b.future is None:
+                reduced.append(None)
+                continue
+            h_tot = None
+            v_chunks = []
+            for hi, fut in enumerate(b.future):
+                h, v = reduce_bucket_parts(*fut.result())
+                if hi == 0:
+                    h_tot = h
+                v_chunks.append(v)
+            reduced.append((h_tot, np.concatenate(v_chunks)[: len(b.strip_ids)]))
+    finally:
+        executor.shutdown(wait=True)
+        prefetch_pool.shutdown(wait=True)
+    for p in pass_map.values():
+        h_tot, v_tot = reduced[p.bucket]
+        p.h_total = int(h_tot[p.strip_lo : p.strip_hi].sum())
+        p.v_total = int(v_tot[p.tile_lo : p.tile_hi].sum())
+
+    profiles: list[ActivityProfile] = []
+    for i, job in enumerate(jobs):
+        kind, payload = resolution[i]
+        if kind == "cache":
+            profiles.append(payload)
+            continue
+        if kind == "serial":
+            profiles.append(
+                profile_ws_gemm(
+                    job.a,
+                    job.w,
+                    job.rows,
+                    job.cols,
+                    job.b_h,
+                    job.b_v,
+                    backend=payload,
+                    use_cache=use_cache,
+                )
+            )
+            continue
+        key, zero_fraction, elements, store_key = payload
+        p = pass_map[key]
+        m, k, n = job.gemm_shape()
+        n_tiles = -(-n // job.cols)
+        counts = ToggleCounts(
+            n_tiles * p.h_total,
+            p.v_total,
+            max(m - 1, 0) * k * n_tiles,
+            max(m - 1, 0) * k * n,
+        )
+        a_h, a_v = counts.activities(job.b_h, job.b_v)
+        profile = ActivityProfile(
+            a_h=a_h,
+            a_v=a_v,
+            b_h=job.b_h,
+            b_v=job.b_v,
+            h_transitions=counts.h_transitions,
+            v_transitions=counts.v_transitions,
+            input_zero_fraction=zero_fraction,
+            input_elements=elements,
+        )
+        if store_key is not None:
+            _cache_put(store_key, profile)
+        profiles.append(profile)
+    return profiles, stats

@@ -61,6 +61,7 @@ __all__ = [
     "ActivityProfile",
     "profile_ws_tile",
     "profile_ws_gemm",
+    "profile_ws_gemms",
     "combine_profiles",
     "clear_profile_cache",
     "profile_cache_info",
@@ -295,20 +296,46 @@ def profile_cache_info() -> dict:
     return {"size": len(_PROFILE_CACHE), **_PROFILE_CACHE_STATS}
 
 
+def _operand_digest(arr: np.ndarray) -> bytes:
+    """Value-canonical sha256 of one operand matrix.
+
+    int16-range data (the common case) hashes at 2 bytes/element instead of
+    the upcast 8, and equal values hit the same digest regardless of input
+    dtype. Also used by the batch pipeline's cross-geometry pass reuse.
+    """
+    h = hashlib.sha256()
+    if arr.size and -32768 <= int(arr.min()) and int(arr.max()) <= 32767:
+        arr = arr.astype(np.int16)
+    h.update(arr.dtype.str.encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.digest()
+
+
 def _cache_key(
     a: np.ndarray, w: np.ndarray, rows, cols, b_h, b_v, mode: tuple
 ) -> bytes:
     h = hashlib.sha256()
     h.update(repr(("v2", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
     for arr in (a, w):
-        # Hash a value-canonical representation: int16-range data (the
-        # common case) hashes at 2 bytes/element instead of the upcast 8,
-        # and equal values hit the same key regardless of input dtype.
-        if arr.size and -32768 <= int(arr.min()) and int(arr.max()) <= 32767:
-            arr = arr.astype(np.int16)
-        h.update(arr.dtype.str.encode())
-        h.update(np.ascontiguousarray(arr).tobytes())
+        h.update(_operand_digest(arr))
     return h.digest()
+
+
+def _cache_get(key: bytes) -> ActivityProfile | None:
+    """LRU lookup + hit/miss accounting (shared with the batch pipeline)."""
+    hit = _PROFILE_CACHE.get(key)
+    if hit is not None:
+        _PROFILE_CACHE_STATS["hits"] += 1
+        _PROFILE_CACHE.move_to_end(key)
+        return hit
+    _PROFILE_CACHE_STATS["misses"] += 1
+    return None
+
+
+def _cache_put(key: bytes, profile: ActivityProfile) -> None:
+    _PROFILE_CACHE[key] = profile
+    while len(_PROFILE_CACHE) > _PROFILE_CACHE_CAPACITY:
+        _PROFILE_CACHE.popitem(last=False)
 
 
 def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
@@ -393,12 +420,9 @@ def profile_ws_gemm(
     key = None
     if use_cache:
         key = _cache_key(a, w, rows, cols, b_h, b_v, (resolved, *mode))
-        hit = _PROFILE_CACHE.get(key)
+        hit = _cache_get(key)
         if hit is not None:
-            _PROFILE_CACHE_STATS["hits"] += 1
-            _PROFILE_CACHE.move_to_end(key)
             return hit
-        _PROFILE_CACHE_STATS["misses"] += 1
 
     plan = None
     if not exact or resolved == "numpy":
@@ -419,10 +443,26 @@ def profile_ws_gemm(
         input_elements=int(a.size),
     )
     if key is not None:
-        _PROFILE_CACHE[key] = profile
-        while len(_PROFILE_CACHE) > _PROFILE_CACHE_CAPACITY:
-            _PROFILE_CACHE.popitem(last=False)
+        _cache_put(key, profile)
     return profile
+
+
+def profile_ws_gemms(jobs, **kwargs):
+    """Batch API: profile MANY GEMMs as a handful of device programs.
+
+    ``jobs`` is a sequence of ``repro.core.pipeline.ProfileJob``; returns the
+    profiles in input order. Jobs are deduped against the content-keyed
+    cache, bucketed into shared padded shape classes to bound recompiles,
+    dispatched asynchronously (device work overlaps the next bucket's
+    host-side operand synthesis), and identical operands profiled across
+    several (rows, cols) geometries share one device pass. Counts are
+    bit-exact vs per-job ``profile_ws_gemm``. See ``repro.core.pipeline``
+    (``run_profile_batch`` returns scheduling statistics as well).
+    """
+    from repro.core.pipeline import run_profile_batch
+
+    profiles, _ = run_profile_batch(jobs, **kwargs)
+    return profiles
 
 
 def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:

@@ -28,6 +28,9 @@ __all__ = [
     "synth_activations",
     "synth_weights",
     "profile_conv_layer",
+    "conv_layer_job",
+    "gemm_job",
+    "profile_network",
     "gemms_for_arch",
 ]
 
@@ -143,6 +146,143 @@ def profile_conv_layer(
         backend=backend,
         use_cache=use_cache,
     )
+
+
+def conv_layer_job(
+    layer: ConvLayer,
+    rows: int = 32,
+    cols: int = 32,
+    bits: int = 16,
+    b_v: int | None = None,
+    seed: int = 0,
+):
+    """A lazy batch-pipeline job for one Table-I conv layer.
+
+    Operand synthesis (``synth_activations`` + ``quantize_symmetric``) runs
+    only when the pipeline materializes the job — i.e. overlapped with the
+    device work of the previous shape-class bucket. Operands and quantization
+    match ``profile_conv_layer`` exactly, so profiles land on (and hit) the
+    same content-keyed cache entries.
+    """
+    from repro.core.floorplan import accumulator_width
+    from repro.core.pipeline import ProfileJob
+
+    g = conv_to_gemm(layer)
+    bv = b_v if b_v is not None else accumulator_width(bits, rows)
+
+    def make():
+        a_f = synth_activations(g.m, g.k, layer.input_density, seed=seed)
+        w_f = synth_weights(g.k, g.n, seed=seed + 1)
+        return quantize_symmetric(a_f, bits).values, quantize_symmetric(w_f, bits).values
+
+    return ProfileJob(
+        rows=rows,
+        cols=cols,
+        b_h=bits,
+        b_v=bv,
+        make=make,
+        shape=(g.m, g.k, g.n),
+        name=layer.name,
+    )
+
+
+def gemm_job(
+    gemm: Gemm,
+    rows: int,
+    cols: int,
+    bits: int,
+    b_v: int | None = None,
+    seed: int = 0,
+    density: float | None = None,
+    clip: tuple[int, int, int] | None = (128, 512, 256),
+):
+    """A lazy job for one (LLM-style) GEMM with synthetic int operands.
+
+    Activations are post-activation (non-negative) Gaussians, weights
+     1/sqrt(K)-scaled Gaussians, quantized to ``bits`` — the recipe of
+    ``examples/sa_power_llm.py``. ``clip`` bounds the profiled slice of
+    very large GEMMs (toggle *rates* converge long before full LLM dims).
+    """
+    from repro.core.floorplan import accumulator_width
+    from repro.core.pipeline import ProfileJob
+
+    m, k, n = gemm.m, gemm.k, gemm.n
+    if clip is not None:
+        m, k, n = min(m, clip[0]), min(k, clip[1]), min(n, clip[2])
+    bv = b_v if b_v is not None else accumulator_width(bits, rows)
+
+    def make():
+        rng = np.random.default_rng(seed)
+        a_f = np.maximum(rng.normal(0.0, 1.0, size=(m, k)), 0.0)
+        if density is not None:
+            a_f = np.where(rng.random((m, k)) < density, a_f, 0.0)
+        w_f = rng.normal(0.0, 1.0 / np.sqrt(k), size=(k, n))
+        return quantize_symmetric(a_f, bits).values, quantize_symmetric(w_f, bits).values
+
+    return ProfileJob(
+        rows=rows,
+        cols=cols,
+        b_h=bits,
+        b_v=bv,
+        make=make,
+        shape=(m, k, n),
+        name=gemm.name,
+    )
+
+
+def profile_network(
+    layers: Sequence[ConvLayer],
+    rows: int = 32,
+    cols: int = 32,
+    bits: int = 16,
+    b_v: int | None = None,
+    max_tiles: int | None = None,
+    max_stream: int | None = None,
+    *,
+    backend: str | None = None,
+    use_cache: bool = True,
+    return_stats: bool = False,
+):
+    """Profile a whole network's conv layers through the batched pipeline.
+
+    The batched analogue of looping ``profile_conv_layer`` — same operands,
+    same seeds (layer i uses seed i, like every existing consumer), same
+    cache keys, bit-exact profiles — but all layers ride a handful of fused
+    device programs with operand synthesis overlapped against device work.
+
+    Subsampling (``max_tiles``/``max_stream``) remains a per-GEMM estimate,
+    so requesting it falls back to the serial loop (the batch pipeline is
+    exact-only). With ``return_stats=True`` also returns the
+    ``repro.core.pipeline.BatchStats`` of the run.
+    """
+    from repro.core.pipeline import BatchStats, run_profile_batch
+
+    layers = list(layers)
+    if max_tiles is not None or max_stream is not None:
+        profiles = [
+            profile_conv_layer(
+                layer,
+                rows=rows,
+                cols=cols,
+                bits=bits,
+                b_v=b_v,
+                max_tiles=max_tiles,
+                max_stream=max_stream,
+                seed=i,
+                backend=backend,
+                use_cache=use_cache,
+            )
+            for i, layer in enumerate(layers)
+        ]
+        stats = BatchStats(jobs=len(layers), serial_fallbacks=len(layers))
+        return (profiles, stats) if return_stats else profiles
+
+    jobs = [
+        conv_layer_job(layer, rows=rows, cols=cols, bits=bits, b_v=b_v, seed=i)
+        for i, layer in enumerate(layers)
+    ]
+    profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
+    return (profiles, stats) if return_stats else profiles
 
 
 def gemms_for_arch(cfg, seq_len: int, batch: int = 1) -> list[Gemm]:

@@ -1,0 +1,297 @@
+"""Stacked segment-window batched engine: one device program per shape class.
+
+The per-GEMM engine (`ops.profile_gemm_toggles`) compiles and dispatches TWO
+jitted programs per distinct GEMM shape — for a whole network that is a
+recompile and a blocking round-trip per layer, and compile time dominates
+(measured ~2s/shape vs ~0.5s of compute on CPU). This module profiles MANY
+GEMMs with a handful of fused programs by flattening every job into
+fixed-shape *segment tasks*:
+
+  * Each job's activation stream is chopped into windows of ``t_seg`` steps
+    **plus one seed row** — the stream value right before the window (the
+    window's own first row for the first segment, so the nonexistent first
+    transition counts zero). Toggle counts only ever compare consecutive
+    stream values, so with the seed row included every window's count is
+    independent: no carry between segments, no time-axis scan in the
+    program, and a job of ANY stream length becomes an integer number of
+    identical (t_seg + 1, rows) strips. Tail padding replicates the last
+    row (repeated values toggle zero bits: count-neutral).
+  * ``strips``  (S, t_seg + 1, rows) int32 — every (job, k-strip, segment)
+    window, K zero-padded.
+  * ``w_tiles`` (W, rows, cols) int32 — every job's distinct weight tiles
+    (segments of one tile share a single copy).
+  * per-task metadata (P,) int32 — ``strip_ids``/``w_ids`` route each task
+    to its operands; ``valid_r`` is the true K extent of each task's tile
+    (K-padding rows would duplicate the previous row's count, so they are
+    gated out; zero-padded w COLUMNS hold their partial sums at zero and
+    toggle nothing, needing no mask; ``valid_r == 0`` turns a whole dummy
+    task off). Totals stay bit-exact vs the unpadded numpy oracle.
+
+Tasks — not jobs — are the batch axis, so jobs of different M/K/N never pad
+each other beyond the ≤2x segment rounding, and the program shape depends
+only on (S, W, P, t_seg, rows, cols, b_h, b_v): a couple of shape classes
+serve an entire network (see ``repro.core.pipeline`` for the bucketing).
+
+Two engines, same counts (verified bit-exact in tests):
+
+  * ``engine="xla"``    — ``bucket_toggle_parts``: ONE jitted program; h is
+    a scan-free vectorized pass over strips, v runs lax.map over task
+    chunks of a vmapped scan down R that carries (t_seg + 1, cols)
+    partial-sum planes — the same cache-friendly inner loop as the
+    per-GEMM engine, minus its outer time-block machinery.
+  * ``engine="pallas"`` — the scalar-prefetch TPU kernel
+    ``kernel.activity_profile_pallas_tasks`` for v plus the XLA h pass
+    (h is O(T*K): a trivial fraction of the v work).
+
+Both return *unconverted* device arrays so callers can overlap bucket i+1's
+host-side operand synthesis with bucket i's device work (async dispatch);
+block with ``reduce_bucket_parts`` when the totals are actually needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.activity_profile.kernel import (
+    activity_profile_pallas_tasks,
+    bus_masks,
+    value32_toggles,
+)
+from repro.kernels.bitops import popcount_u32
+
+__all__ = [
+    "TASK_CHUNK_BUDGET",
+    "choose_task_chunk",
+    "popcount_sum",
+    "segment_strips",
+    "bucket_toggle_parts",
+    "reduce_bucket_parts",
+]
+
+# Vectorization width of the v pass: tasks per lax.map step, sized so one
+# step's (chunk, t_seg + 1, cols) scan state is ~2^20 elements — big enough
+# for XLA:CPU's intra-op threads to engage (measured ~30% faster than
+# 32-lane steps), small enough that the ~6 live temporaries stay in tens
+# of MB.
+TASK_CHUNK_BUDGET = 1 << 20
+
+
+def choose_task_chunk(num_tasks: int, t_seg1: int, cols: int) -> int:
+    chunk = max(8, TASK_CHUNK_BUDGET // max(t_seg1 * cols, 1))
+    if num_tasks <= chunk:
+        return max(1, num_tasks)
+    # Balance the final lax.map steps so chunk-rounding wastes < one step.
+    steps = -(-num_tasks // chunk)
+    return -(-num_tasks // steps)
+
+
+def popcount_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Total popcount over ALL elements of a uint32 array.
+
+    Plain SWAR-then-reduce: XLA:CPU fuses the whole per-word chain into the
+    surrounding loop, which measures FASTER than a Harley–Seal carry-save
+    tree here (the CSA group reshape/slicing defeats loop fusion).
+    """
+    return jnp.sum(popcount_u32(x))
+
+
+def _toggles_sum_planes(xl: jnp.ndarray, xh: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Sum of ``bits``-bus toggles from lo/hi XOR planes (bits > 32)."""
+    lo_m, hi_m = bus_masks(bits)
+    cnt = popcount_sum(xl.astype(jnp.uint32) & jnp.uint32(lo_m))
+    if hi_m:
+        cnt = cnt + popcount_sum(xh.astype(jnp.uint32) & jnp.uint32(hi_m))
+    return cnt.astype(jnp.int32)
+
+
+def _toggles_sum_value32(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Sum of ``bits``-bus toggles from int32 XOR words (bits <= 32)."""
+    lo_m, _ = bus_masks(min(bits, 32))
+    return popcount_sum(x.astype(jnp.uint32) & jnp.uint32(lo_m)).astype(jnp.int32)
+
+
+def segment_strips(a: np.ndarray, rows: int, t_seg: int) -> list[np.ndarray]:
+    """Chop one job's (M, K) stream into seeded (t_seg + 1, rows) windows.
+
+    Returns k-strip-major windows: ``[strip0_seg0, strip0_seg1, ...,
+    strip1_seg0, ...]`` — ceil(K/rows) * ceil(M/t_seg) arrays. K zero-pads
+    to a strip multiple; M tail-pads by edge replication; each window's row
+    0 is the stream value preceding the window (its own first row for
+    segment 0). All padding is count-neutral by construction.
+    """
+    m, k = a.shape
+    if m < 1:
+        raise ValueError("need at least one stream step")
+    n_seg = max(1, -(-m // t_seg))
+    pk = (-k) % rows
+    a_pad = np.pad(a.astype(np.int32), ((0, n_seg * t_seg - m), (0, pk)), mode="edge")
+    if pk:
+        a_pad[:, k:] = 0
+    out = []
+    for kt in range(a_pad.shape[1] // rows):
+        strip = a_pad[:, kt * rows : (kt + 1) * rows]
+        for s in range(n_seg):
+            t0 = s * t_seg
+            seed = strip[t0 - 1 if s else t0]
+            out.append(
+                np.concatenate([seed[None], strip[t0 : t0 + t_seg]], axis=0)
+            )
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "cols", "b_h", "b_v", "task_chunk"),
+)
+def _bucket_counts_xla(
+    strips: jnp.ndarray,
+    w_tiles: jnp.ndarray,
+    strip_ids: jnp.ndarray,
+    w_ids: jnp.ndarray,
+    valid_r: jnp.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    b_h: int,
+    b_v: int,
+    task_chunk: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused program: h totals per strip window + v totals per task.
+
+    Every count is int32-safe: a window holds t_seg * rows * cols <=
+    2^20 plane elements (choose_block_t's budget), so per-strip h <=
+    t_seg * rows * 64 and per-task v <= t_seg * rows * cols * 64 < 2^27.
+    The caller reduces across strips/tasks in int64.
+    """
+    # --- horizontal: consecutive-row toggles, no scan at all ----------------
+    h_parts = jax.vmap(
+        lambda s: jnp.sum(value32_toggles(s[1:], s[:-1], b_h))
+    )(strips)
+
+    # --- vertical: lax.map over task chunks, scan down R per task -----------
+    # Masking is cheap by construction: zero-padded w COLUMNS keep their
+    # partial sums identically zero (no toggles, no mask needed), and a-pad
+    # ROWS only ever duplicate the previous row's count, so validity is a
+    # scalar gate on the per-row sum rather than an elementwise mask.
+    t_seg1 = strips.shape[1]
+    rix = jnp.arange(rows, dtype=jnp.int32)
+
+    def per_task(p):
+        aw = strips[strip_ids[p]]  # (t_seg + 1, rows)
+        w_t = w_tiles[w_ids[p]]  # (rows, cols)
+        vr = valid_r[p]
+
+        if b_v <= 32:
+            # Fast path: the bus sees only the low 32 bits of the sum, and
+            # the lo plane evolves independently (mod-2^32 addition) — no
+            # carry chain, no hi plane, one popcount per transition.
+            def rstep(run_lo, xs):
+                a_col, w_row, r = xs
+                new_lo = run_lo + a_col[:, None] * w_row[None, :]
+                cnt = _toggles_sum_value32(new_lo[1:] ^ new_lo[:-1], b_v)
+                return new_lo, jnp.where(r < vr, cnt, 0)
+
+            zero = jnp.zeros((t_seg1, cols), jnp.int32)
+            _, cnts = jax.lax.scan(rstep, zero, (aw.T, w_t, rix))
+            return jnp.sum(cnts)
+
+        def rstep(carry, xs):
+            run_lo, run_hi = carry  # (t_seg + 1, cols): S[., r-1, :] planes
+            a_col, w_row, r = xs
+            prod = a_col[:, None] * w_row[None, :]
+            new_lo = run_lo + prod
+            c = (new_lo.astype(jnp.uint32) < run_lo.astype(jnp.uint32)).astype(
+                jnp.int32
+            )
+            new_hi = run_hi + (prod >> jnp.int32(31)) + c
+            cnt = _toggles_sum_planes(
+                new_lo[1:] ^ new_lo[:-1], new_hi[1:] ^ new_hi[:-1], b_v
+            )
+            return (new_lo, new_hi), jnp.where(r < vr, cnt, 0)
+
+        zero = jnp.zeros((t_seg1, cols), jnp.int32)
+        _, cnts = jax.lax.scan(rstep, (zero, zero), (aw.T, w_t, rix))
+        return jnp.sum(cnts)
+
+    ids = jnp.arange(strip_ids.shape[0], dtype=jnp.int32)
+    v_parts = jax.lax.map(jax.vmap(per_task), ids.reshape(-1, task_chunk))
+    return h_parts, v_parts.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("b_h",))
+def _h_strips_xla(strips: jnp.ndarray, *, b_h: int) -> jnp.ndarray:
+    """Standalone h pass for the Pallas engine (same math as above)."""
+    return jax.vmap(lambda s: jnp.sum(value32_toggles(s[1:], s[:-1], b_h)))(strips)
+
+
+def bucket_toggle_parts(
+    strips: np.ndarray,
+    w_tiles: np.ndarray,
+    strip_ids: np.ndarray,
+    w_ids: np.ndarray,
+    valid_r: np.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    b_h: int,
+    b_v: int,
+    engine: str = "auto",
+    interpret: bool = False,
+    device=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Dispatch one bucket's fused program; do NOT block on the result.
+
+    Returns ``(h_parts, v_parts, num_tasks)``: per-strip and per-task int32
+    totals, still computing when this returns (jax async dispatch) so the
+    caller can overlap the next bucket's host-side work. Rows of
+    ``v_parts`` past ``num_tasks`` are chunk-padding dummies.
+
+    ``device`` places the bucket on a specific jax device — the pipeline
+    round-robins buckets over ``jax.local_devices()`` so multi-device hosts
+    (including CPU hosts running with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) crunch buckets
+    genuinely in parallel.
+    """
+    num_tasks = int(strip_ids.shape[0])
+    task_chunk = choose_task_chunk(num_tasks, int(strips.shape[1]), cols)
+    pad = (-num_tasks) % task_chunk
+    if pad:
+        zeros = np.zeros(pad, np.int32)
+        strip_ids = np.concatenate([strip_ids, zeros])
+        w_ids = np.concatenate([w_ids, zeros])
+        valid_r = np.concatenate([valid_r, zeros])  # vr=0 gates dummies off
+    put = (lambda x: jax.device_put(x, device)) if device is not None else jnp.asarray
+    args = (
+        put(strips),
+        put(w_tiles),
+        put(strip_ids.astype(np.int32)),
+        put(w_ids.astype(np.int32)),
+        put(valid_r.astype(np.int32)),
+    )
+    if engine == "auto":
+        engine = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if engine == "xla":
+        h_parts, v_parts = _bucket_counts_xla(
+            *args, rows=rows, cols=cols, b_h=b_h, b_v=b_v, task_chunk=task_chunk
+        )
+    elif engine == "pallas":
+        h_parts = _h_strips_xla(args[0], b_h=b_h)
+        v_parts = activity_profile_pallas_tasks(
+            *args, rows=rows, cols=cols, b_v=b_v, interpret=interpret
+        )
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return h_parts, v_parts, num_tasks
+
+
+def reduce_bucket_parts(
+    h_parts, v_parts, num_tasks: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Block on a bucket's device arrays; int64 per-strip / per-task totals."""
+    h = np.asarray(h_parts).astype(np.int64)
+    v = np.asarray(v_parts).astype(np.int64)[:num_tasks]
+    return h, v

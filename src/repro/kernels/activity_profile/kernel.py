@@ -59,6 +59,7 @@ __all__ = [
     "planes_toggles",
     "value32_toggles",
     "activity_profile_pallas",
+    "activity_profile_pallas_tasks",
 ]
 
 
@@ -235,3 +236,91 @@ def activity_profile_pallas(
         ],
         interpret=interpret,
     )(a_pad, w_pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "cols", "b_v", "interpret"),
+)
+def activity_profile_pallas_tasks(
+    strips: jnp.ndarray,
+    w_tiles: jnp.ndarray,
+    strip_ids: jnp.ndarray,
+    w_ids: jnp.ndarray,
+    valid_r: jnp.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    b_v: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Vertical-bus toggles for a STACKED segment-task batch (multi-GEMM).
+
+    The batch pipeline (`repro.kernels.activity_profile.batch`) flattens
+    many GEMMs into fixed-shape segment tasks; this kernel runs one task
+    per grid cell. Task metadata rides in scalar-prefetch arrays so the
+    BlockSpec index maps can route each cell to its operands: ``strips`` is
+    (S, t_seg + 1, rows) seeded stream windows, ``w_tiles`` (W, rows, cols),
+    ``strip_ids``/``w_ids``/``valid_r`` (P,) int32. Each cell walks the
+    reduction rows with a fori_loop carrying the (t_seg + 1, cols)
+    partial-sum lo/hi planes — the (T, R, C) tensor never exists, VMEM holds
+    one strip window + one weight tile + two plane carries. K-padding rows
+    (r >= valid_r) would duplicate the previous row's count and are gated
+    out of the scalar sum; zero-padded w columns toggle nothing by
+    construction; valid_r == 0 turns dummy chunk-padding tasks off.
+    Returns (P,) int32 totals; the caller reduces in int64 (each total <=
+    t_seg*rows*cols*64 < 2^27 by the choose_block_t budget). Horizontal
+    counts are per-strip, not per-task, and run in the sibling XLA strips
+    pass (a trivial fraction of the work).
+    """
+    num_tasks = strip_ids.shape[0]
+    t_seg1 = strips.shape[1]
+
+    def kernel(sid_ref, wid_ref, vr_ref, a_ref, w_ref, v_ref):
+        p = pl.program_id(0)
+        aw = a_ref[0]  # (t_seg + 1, rows)
+        w = w_ref[0]  # (rows, cols)
+        vr = vr_ref[p]
+
+        def body(r, carry):
+            run_lo, run_hi, acc = carry  # planes: (t_seg + 1, cols)
+            a_col = jax.lax.dynamic_index_in_dim(aw, r, axis=1, keepdims=False)
+            w_row = jax.lax.dynamic_index_in_dim(w, r, axis=0, keepdims=False)
+            prod = a_col[:, None] * w_row[None, :]
+            new_lo = run_lo + prod
+            if b_v <= 32:
+                # lo plane alone is exact for buses <= 32 bits (mod-2^32
+                # addition); skip the carry chain and the hi popcount
+                new_hi = run_hi
+                cnt = jnp.sum(value32_toggles(new_lo[1:], new_lo[:-1], b_v))
+            else:
+                c = (new_lo.astype(jnp.uint32) < run_lo.astype(jnp.uint32)).astype(
+                    jnp.int32
+                )
+                new_hi = run_hi + (prod >> jnp.int32(31)) + c
+                cnt = jnp.sum(
+                    planes_toggles(
+                        new_lo[1:], new_hi[1:], new_lo[:-1], new_hi[:-1], b_v
+                    )
+                )
+            return new_lo, new_hi, acc + jnp.where(r < vr, cnt, 0)
+
+        zero = jnp.zeros((t_seg1, cols), jnp.int32)
+        _, _, acc = jax.lax.fori_loop(0, rows, body, (zero, zero, jnp.int32(0)))
+        v_ref[0] = acc
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_tasks,),
+        in_specs=[
+            pl.BlockSpec((1, t_seg1, rows), lambda p, sid, wid, vr: (sid[p], 0, 0)),
+            pl.BlockSpec((1, rows, cols), lambda p, sid, wid, vr: (wid[p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda p, sid, wid, vr: (p,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tasks,), jnp.int32),
+        interpret=interpret,
+    )(strip_ids, w_ids, valid_r, strips, w_tiles)

@@ -1,0 +1,240 @@
+"""Batched network-level profiling pipeline: bit-exact equivalence of the
+batched engine vs the per-GEMM engine and the numpy counts oracle on ragged
+job sets, cache-hit accounting across a batch, geometry-sweep pass reuse,
+device sharding, serial fallbacks, and the workload-level profile_network
+wrapper. The Pallas task kernel runs under interpret=True for CPU CI."""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import BatchStats, ProfileJob, run_profile_batch
+from repro.core.switching import (
+    clear_profile_cache,
+    profile_cache_info,
+    profile_ws_gemm,
+    profile_ws_gemms,
+)
+from repro.core.workloads import ConvLayer, conv_layer_job, profile_network
+from repro.kernels.activity_profile.ref import profile_gemm_toggles_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_gemm(m, k, n, lo=-32767, hi=32768):
+    return (
+        RNG.integers(lo, hi, size=(m, k)),
+        RNG.integers(lo, hi, size=(k, n)),
+    )
+
+
+def _counts(p):
+    """Exact integer toggle totals back out of a profile (lossless: the
+    activities are integer ratios held in float64 far below 2^53)."""
+    return (
+        round(p.a_h * p.h_transitions * p.b_h),
+        round(p.a_v * p.v_transitions * p.b_v),
+        p.h_transitions,
+        p.v_transitions,
+    )
+
+
+# Ragged multi-job batch: mixed M/K/N, non-aligned shapes, several
+# geometries and bus widths, negative operands — one pipeline call.
+RAGGED = [
+    # m, k, n, rows, cols, b_h, b_v
+    (7, 5, 3, 16, 8, 16, 37),
+    (33, 70, 10, 16, 8, 16, 37),
+    (100, 37, 29, 16, 8, 8, 20),
+    (64, 64, 48, 32, 32, 16, 37),
+    (257, 40, 33, 16, 16, 37, 33),
+    (300, 80, 70, 32, 32, 16, 64),
+    (50, 24, 16, 8, 8, 8, 23),  # b_v <= 32: lo-plane fast path
+]
+
+
+@pytest.mark.parametrize("engine,interpret", [("xla", False), ("pallas", True)])
+def test_batched_ragged_set_bit_exact(engine, interpret):
+    jobs = [
+        ProfileJob(rows=r, cols=c, b_h=bh, b_v=bv, a=a, w=w, name=f"{m}x{k}x{n}")
+        for (m, k, n, r, c, bh, bv) in RAGGED
+        for a, w in [_rand_gemm(m, k, n)]
+    ]
+    profiles, stats = run_profile_batch(
+        jobs, use_cache=False, engine=engine, interpret=interpret
+    )
+    assert stats.jobs == len(jobs) and stats.serial_fallbacks == 0
+    for job, p in zip(jobs, profiles):
+        ref = profile_gemm_toggles_ref(
+            job.a, job.w, job.rows, job.cols, job.b_h, job.b_v
+        )
+        assert _counts(p) == ref, job.name
+        s = profile_ws_gemm(
+            job.a, job.w, job.rows, job.cols, job.b_h, job.b_v,
+            backend="pallas", use_cache=False,
+        )
+        assert (p.a_h, p.a_v) == (s.a_h, s.a_v), job.name
+        assert p.input_zero_fraction == s.input_zero_fraction
+        assert p.input_elements == job.a.size
+
+
+def test_batched_matches_serial_on_long_streams():
+    """Multi-segment streams (m >> t_seg) exercise the seeded-window splits."""
+    a, w = _rand_gemm(1025, 96, 64)
+    (p,), _ = run_profile_batch(
+        [ProfileJob(rows=32, cols=32, b_h=16, b_v=37, a=a, w=w)], use_cache=False
+    )
+    s = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="pallas", use_cache=False)
+    assert _counts(p) == _counts(s)
+
+
+def test_geometry_sweep_shares_one_pass():
+    """One GEMM profiled across several (rows, cols): the h-strip totals and
+    the rows-dependent v pass are computed once and shared (cols only
+    rescales ceil(N/cols)); profiles stay bit-exact vs per-GEMM calls."""
+    a, w = _rand_gemm(50, 40, 20, lo=-500, hi=500)
+    jobs = [
+        ProfileJob(rows=32, cols=c, b_h=16, b_v=37, a=a, w=w) for c in (32, 16, 8)
+    ]
+    profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.passes == 1 and stats.pass_reuse == 2
+    for c, p in zip((32, 16, 8), profiles):
+        s = profile_ws_gemm(a, w, 32, c, 16, 37, backend="pallas", use_cache=False)
+        assert _counts(p) == _counts(s)
+    # different rows => new v pass required
+    jobs.append(ProfileJob(rows=16, cols=32, b_h=16, b_v=37, a=a, w=w))
+    _, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.passes == 2 and stats.pass_reuse == 2
+
+
+def test_shape_aliased_operands_do_not_share_a_pass():
+    """Same bytes reshaped to different (M, K)/(K, N) are different streams:
+    the pass key must include shapes, not just content digests."""
+    buf_a = RNG.integers(-50, 50, size=64)
+    buf_w = RNG.integers(-50, 50, size=64)
+    jobs = [
+        ProfileJob(rows=8, cols=8, b_h=16, b_v=37,
+                   a=buf_a.reshape(8, 8), w=buf_w.reshape(8, 8)),
+        ProfileJob(rows=8, cols=8, b_h=16, b_v=37,
+                   a=buf_a.reshape(4, 16), w=buf_w.reshape(16, 4)),
+    ]
+    profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.passes == 2 and stats.pass_reuse == 0
+    for job, p in zip(jobs, profiles):
+        assert _counts(p) == profile_gemm_toggles_ref(
+            job.a, job.w, 8, 8, 16, 37
+        )
+
+
+def test_intra_batch_dedup_and_cache_accounting():
+    clear_profile_cache()
+    a, w = _rand_gemm(32, 16, 8, lo=0, hi=100)
+    jobs = [
+        ProfileJob(rows=16, cols=8, b_h=16, b_v=37, a=a, w=w),
+        # same content, different dtype/copy: must dedup to one device pass
+        ProfileJob(rows=16, cols=8, b_h=16, b_v=37, a=a.astype(np.int32), w=w.copy()),
+    ]
+    profiles, stats = run_profile_batch(jobs)
+    assert stats.passes == 1 and stats.pass_reuse == 1 and stats.cache_hits == 0
+    assert _counts(profiles[0]) == _counts(profiles[1])
+    # second batch: every job is a content-cache hit, nothing runs on device
+    profiles2, stats2 = run_profile_batch(jobs)
+    assert stats2.cache_hits == 2 and stats2.passes == 0 and stats2.buckets == 0
+    assert profiles2[0] == profiles[0]
+    # the cache is shared with the serial API (same keys)
+    hits_before = profile_cache_info()["hits"]
+    profile_ws_gemm(a, w, 16, 8, 16, 37)
+    assert profile_cache_info()["hits"] == hits_before + 1
+    clear_profile_cache()
+
+
+def test_serial_fallbacks_and_degenerate_shapes():
+    wide_a = RNG.integers(-(2**30), 2**30, size=(16, 8))
+    wide_w = RNG.integers(-(2**30), 2**30, size=(8, 4))
+    tiny_a, tiny_w = _rand_gemm(1, 4, 4)  # m < 2: zero transitions
+    a, w = _rand_gemm(20, 8, 4, lo=0, hi=50)
+    jobs = [
+        ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=wide_a, w=wide_w),
+        ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=tiny_a, w=tiny_w),
+        ProfileJob(rows=8, cols=4, b_h=16, b_v=37, a=a, w=w),
+    ]
+    with pytest.warns(RuntimeWarning):
+        profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.serial_fallbacks == 2 and stats.passes == 1
+    s_wide = profile_ws_gemm(wide_a, wide_w, 8, 8, 16, 37, backend="numpy",
+                             use_cache=False)
+    assert profiles[0] == s_wide
+    assert profiles[1].h_transitions == 0 and profiles[1].a_v == 0.0
+    assert _counts(profiles[2]) == profile_gemm_toggles_ref(a, w, 8, 4, 16, 37)
+
+
+def test_backend_numpy_runs_serial_oracle():
+    a, w = _rand_gemm(12, 6, 5, lo=0, hi=50)
+    jobs = [ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w)]
+    profiles, stats = run_profile_batch(jobs, backend="numpy", use_cache=False)
+    assert stats.serial_fallbacks == 1 and stats.buckets == 0
+    assert _counts(profiles[0]) == profile_gemm_toggles_ref(a, w, 8, 8, 16, 37)
+
+
+def test_device_sharding_bit_exact(monkeypatch):
+    """Simulated multi-device host: task-axis shards stay bit-exact."""
+    import jax
+
+    real = jax.local_devices()
+    monkeypatch.setattr(jax, "local_devices", lambda *a, **k: real * 2)
+    a, w = _rand_gemm(300, 80, 70)
+    (p,), _ = run_profile_batch(
+        [ProfileJob(rows=32, cols=32, b_h=16, b_v=37, a=a, w=w)], use_cache=False
+    )
+    assert _counts(p) == profile_gemm_toggles_ref(a, w, 32, 32, 16, 37)
+
+
+def test_lazy_jobs_and_shape_validation():
+    a, w = _rand_gemm(10, 6, 4, lo=0, hi=50)
+    job = ProfileJob(
+        rows=8, cols=8, b_h=16, b_v=37, make=lambda: (a, w), shape=(10, 6, 4)
+    )
+    (p,), _ = run_profile_batch([job], use_cache=False)
+    assert _counts(p) == profile_gemm_toggles_ref(a, w, 8, 8, 16, 37)
+    bad = ProfileJob(
+        rows=8, cols=8, b_h=16, b_v=37, make=lambda: (a, w), shape=(11, 6, 4)
+    )
+    with pytest.raises(ValueError, match="declared shape"):
+        run_profile_batch([bad], use_cache=False)
+    with pytest.raises(ValueError, match="needs shape"):
+        ProfileJob(rows=8, cols=8, b_h=16, b_v=37, make=lambda: (a, w)).gemm_shape()
+
+
+def test_profile_ws_gemms_wrapper_and_order():
+    jobs = []
+    expect = []
+    for m, k, n in [(9, 5, 4), (21, 17, 3), (6, 2, 2)]:
+        a, w = _rand_gemm(m, k, n, lo=-200, hi=200)
+        jobs.append(ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w))
+        expect.append(profile_gemm_toggles_ref(a, w, 8, 8, 16, 37))
+    profiles = profile_ws_gemms(jobs, use_cache=False)
+    assert [_counts(p) for p in profiles] == expect
+
+
+def test_profile_network_matches_serial_layers():
+    layers = [
+        ConvLayer("t1", k=1, h=5, w=5, c=40, m=9, input_density=0.5),
+        ConvLayer("t2", k=3, h=3, w=3, c=7, m=17, input_density=0.4),
+    ]
+    clear_profile_cache()
+    batched, stats = profile_network(
+        layers, rows=16, cols=8, bits=8, use_cache=False, return_stats=True
+    )
+    assert isinstance(stats, BatchStats) and stats.jobs == 2
+    for i, layer in enumerate(layers):
+        job = conv_layer_job(layer, rows=16, cols=8, bits=8, seed=i)
+        a, w = job.operands()
+        assert _counts(batched[i]) == profile_gemm_toggles_ref(
+            a, w, 16, 8, job.b_h, job.b_v
+        )
+    # subsampling falls back to the serial per-GEMM estimate
+    sub, stats_sub = profile_network(
+        layers, rows=16, cols=8, bits=8, max_tiles=1, max_stream=8,
+        use_cache=False, return_stats=True,
+    )
+    assert stats_sub.serial_fallbacks == 2
+    assert all(0.0 <= p.a_v <= 1.0 for p in sub)
