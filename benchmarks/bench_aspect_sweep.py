@@ -1,5 +1,12 @@
-"""Aspect-ratio sweep (Fig. 2/3 analog): wirelength + bus power vs W/H,
-showing the minimum at the paper's 3.8 design point."""
+"""Aspect-ratio sweep (Fig. 2/3 analog): wirelength + bus power vs W/H.
+
+Activities come from a MEASURED profile of the Table-I layer set, drawn
+through the shared sha256-keyed profile cache (so repeat runs — and any
+other benchmark that already profiled the same layers — pay nothing), with
+the paper's published ResNet50 constants as the fallback when profiling is
+unavailable (e.g. no usable backend).  The sweep itself runs through the
+vectorized kernels via ``sweep_aspects``.
+"""
 
 from __future__ import annotations
 
@@ -11,18 +18,37 @@ from repro.core.floorplan import (
     bus_power,
     optimal_aspect_power,
     sweep_aspects,
-    wirelength_total,
 )
 
 
-def run() -> list[dict]:
+def _activity(smoke: bool) -> tuple[BusActivity, str]:
+    """Measured Table-I activities via the cached batch pipeline; paper
+    constants when profiling is unavailable."""
+    try:
+        from repro.core.switching import combine_profiles
+        from repro.core.workloads import RESNET50_TABLE1, profile_network
+
+        layers = RESNET50_TABLE1[:2] if smoke else RESNET50_TABLE1
+        avg = combine_profiles(profile_network(layers))
+        return avg.as_bus_activity(), f"measured({len(layers)} layers)"
+    except Exception as e:  # pragma: no cover - fallback path
+        return BusActivity.paper_resnet50(), f"paper-constants ({type(e).__name__})"
+
+
+def run(smoke: bool = False) -> list[dict]:
     geom = SystolicArrayGeometry.paper_32x32()
-    act = BusActivity.paper_resnet50()
+    act, source = _activity(smoke)
     aspects = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 3.8, 4.0, 5.0, 6.0, 8.0]
     rows = sweep_aspects(geom, act, aspects)
     opt = optimal_aspect_power(geom, act)
     p_opt = bus_power(geom, act, opt)
-    out = []
+    out = [
+        {
+            "name": "aspect_sweep/activity",
+            "us_per_call": 0.0,
+            "derived": f"{source}: a_h={act.a_h:.3f} a_v={act.a_v:.3f}",
+        }
+    ]
     for r in rows:
         out.append(
             {
@@ -39,7 +65,7 @@ def run() -> list[dict]:
         {
             "name": "aspect_sweep/optimum",
             "us_per_call": 0.0,
-            "derived": f"W/H*={opt:.3f} (paper: 3.8)",
+            "derived": f"W/H*={opt:.3f} (paper: 3.8 at the paper's constants)",
         }
     )
     # sanity: sweep minimum sits at the closed-form optimum

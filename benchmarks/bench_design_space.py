@@ -1,100 +1,276 @@
-"""Beyond-paper design-space sweep:
+"""Design-space exploration through the jitted array-first engine.
 
-  * array-size scaling (B_v grows as 2B + log2 R -> the optimal asymmetry
-    and its savings grow with the array),
-  * robust multi-workload design points (average / weighted / minimax),
-  * output-stationary dataflow (asymmetry vanishes),
-  * bus-invert coding on the vertical bus composed with the asymmetric
-    floorplan (the paper's ref [19], quantified jointly).
+Builds a declarative ``DesignSpace`` (rows x cols x input bits x bus-invert
+x PE area), couples it to MEASURED network activity profiles (one
+``run_profile_batch`` pass per (rows, b_h, b_v) activity class feeds the
+whole cols/area/coding cross product), evaluates the full grid — per-point
+Eq. 6 optima, batched log-space golden-section cross-checks, vectorized
+minimax-regret across the workload axis, calibrated savings, plus the
+(P, S) aspect-sweep surface — and extracts the Pareto frontier over
+(bus power, area, worst-case regret).
+
+Reported throughput counts *design points* — (geometry config, aspect)
+cells, the aspect being the design variable the paper is about, with the
+per-geometry statistics (W workload optima + robust minimax + savings)
+folded into each geometry's S cells; the grid row spells the accounting
+out ("P geometry configs x S aspect choices").  The baseline loops the
+scalar dataclass API over a sampled subset doing identical math.
+Vectorized results are verified ``allclose`` against the scalar closed
+forms on that subset; the run fails loudly on divergence, an empty
+frontier, or a sub-floor speedup.
 """
 
 from __future__ import annotations
 
-from repro.core.energy import compare_sym_asym
+import time
+
+import numpy as np
+
+from repro.core.design_space import (
+    _HAS_JAX,
+    DesignSpace,
+    evaluate_design_space,
+    sweep_bus_power,
+)
+from repro.core.energy import power_breakdown
 from repro.core.floorplan import (
+    ASPECT_MAX,
+    ASPECT_MIN,
     BusActivity,
     SystolicArrayGeometry,
-    accumulator_width,
     bus_power,
     optimal_aspect_power,
 )
 from repro.core.optimize import (
+    bus_invert_activity,
     bus_invert_geometry,
     max_regret,
-    os_dataflow_geometry,
     robust_design_point,
 )
 from repro.core.switching import ActivityProfile
+from repro.core.workloads import (
+    RESNET50_TABLE1,
+    ConvLayer,
+    measured_design_activities,
+)
 
-ACT = BusActivity.paper_resnet50()
+# Small synthetic conv layers for the CI smoke configuration: the measured
+# coupling is exercised end to end, but each profiling pass is milliseconds.
+SMOKE_LAYERS = (
+    ConvLayer("S1", k=1, h=10, w=10, c=64, m=48, input_density=0.55),
+    ConvLayer("S2", k=1, h=8, w=8, c=96, m=64, input_density=0.40),
+    ConvLayer("S3", k=1, h=8, w=8, c=48, m=96, input_density=0.30),
+)
+
+SPEEDUP_TARGET = 50.0  # acceptance: full grid, jitted engine vs scalar loop
+SPEEDUP_FLOOR_SMOKE = 5.0
 
 
-def run() -> list[dict]:
+def _space(smoke: bool) -> DesignSpace:
+    if smoke:
+        return DesignSpace(
+            rows=(4, 8),
+            cols=(4, 6, 8, 12, 16, 24, 32, 48),
+            input_bits=(8,),
+            bus_invert=(False, True),
+            pe_area_um2=(900.0, 1200.0),
+        )
+    return DesignSpace(
+        rows=(8, 16, 32, 64),
+        cols=(4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 160, 192, 224, 256, 320),
+        input_bits=(8, 16),
+        bus_invert=(False, True),
+        pe_area_um2=(800.0, 1000.0, 1200.0, 1600.0),
+    )
+
+
+def _scalar_point_eval(grid, i, a_h, a_v, comb_h, comb_v, aspects):
+    """Everything the engine computes for geometry point i, via the scalar
+    dataclass API: per-workload BI transform + Eq. 6 optimum + powers,
+    minimax-regret robust aspect, calibrated breakdowns, and the point's
+    aspect-sweep row."""
+    geom = grid.geometry(i)
+    coded = bool(grid.bus_invert[i])
+    bits = int(grid.b_v_data[i])
+    acts, profs = [], []
+    for w in range(a_h.shape[0]):
+        av = float(a_v[w, i])
+        if coded:
+            av = bus_invert_activity(av, bits)
+        act = BusActivity(float(a_h[w, i]), av)
+        acts.append(act)
+        profs.append(ActivityProfile(act.a_h, act.a_v, geom.b_h, geom.b_v, 1, 1, 0.0))
+        opt = optimal_aspect_power(geom, act)
+        bus_power(geom, act, opt)
+        bus_power(geom, act, 1.0)
+    robust = robust_design_point(geom, profs, "minimax")
+    mr = max_regret(geom, acts, robust)
+    for act in acts:
+        power_breakdown(geom, act, robust)
+        power_breakdown(geom, act, 1.0)
+    cv = float(comb_v[i])
+    if coded:
+        cv = bus_invert_activity(cv, bits)
+    c_act = BusActivity(float(comb_h[i]), cv)
+    sweep_row = [bus_power(geom, c_act, float(a)) for a in aspects]
+    return robust, mr, np.asarray(sweep_row)
+
+
+def run(smoke: bool = False) -> list[dict]:
     out = []
+    space = _space(smoke)
+    grid = space.expand()
+    layers = SMOKE_LAYERS if smoke else RESNET50_TABLE1
+    aspects = np.exp(
+        np.linspace(np.log(ASPECT_MIN), np.log(ASPECT_MAX), 64 if smoke else 128)
+    )
+    p, s = grid.n_points, len(aspects)
+    n_cells = p * s
 
-    # --- array-size scaling --------------------------------------------------
-    for r in (8, 16, 32, 64, 128):
-        geom = SystolicArrayGeometry(
-            rows=r, cols=r, b_h=16, b_v=accumulator_width(16, r)
-        )
-        c = compare_sym_asym(geom, ACT)
-        out.append(
-            {
-                "name": f"design_space/size_{r}x{r}_int16",
-                "us_per_call": 0.0,
-                "derived": (
-                    f"B_v={geom.b_v} W/H*={optimal_aspect_power(geom, ACT):.2f} "
-                    f"interconnect_saving={c.interconnect_saving*100:.1f}%"
-                ),
-            }
-        )
-
-    # --- robust multi-workload design points ---------------------------------
-    geom = SystolicArrayGeometry.paper_32x32()
-    profiles = [
-        ActivityProfile(0.15, 0.30, 16, 37, 1000, 1000, 0.6),
-        ActivityProfile(0.25, 0.40, 16, 37, 1000, 1000, 0.5),
-        ActivityProfile(0.35, 0.45, 16, 37, 1000, 1000, 0.3),
-    ]
-    acts = [p.as_bus_activity() for p in profiles]
-    for strat in ("average", "minimax"):
-        d = robust_design_point(geom, profiles, strat)
-        out.append(
-            {
-                "name": f"design_space/robust_{strat}",
-                "us_per_call": 0.0,
-                "derived": (
-                    f"W/H={d:.2f} max_regret={max_regret(geom, acts, d)*100:.2f}% "
-                    f"(vs square {max_regret(geom, acts, 1.0)*100:.2f}%)"
-                ),
-            }
-        )
-
-    # --- output-stationary ----------------------------------------------------
-    os_geom = os_dataflow_geometry(16, 32, 32)
+    # --- measured activity coupling (profiling passes shared per class) ----
+    t0 = time.perf_counter()
+    a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
+    t_profile = time.perf_counter() - t0
+    comb_h, comb_v = a_h.mean(axis=0), a_v.mean(axis=0)
     out.append(
         {
-            "name": "design_space/output_stationary",
-            "us_per_call": 0.0,
+            "name": "design_space/grid",
+            "us_per_call": t_profile * 1e6 / max(stats.jobs, 1),
             "derived": (
-                f"B_h=B_v={os_geom.b_h}: W/H*="
-                f"{optimal_aspect_power(os_geom, BusActivity(0.3, 0.3)):.2f} "
-                "(asymmetry is a WS-dataflow property)"
+                f"{p} geometry configs x {s} aspect choices = {n_cells} design points "
+                f"(workloads={a_h.shape[0]} profile_jobs={stats.jobs} "
+                f"cache_hits={stats.cache_hits} passes={stats.passes} "
+                f"profile_s={t_profile:.2f})"
             ),
         }
     )
 
-    # --- bus-invert composition ------------------------------------------------
-    geom2, act2 = bus_invert_geometry(geom, ACT)
-    p_square = bus_power(geom, ACT, 1.0)
-    p_asym = bus_power(geom, ACT, optimal_aspect_power(geom, ACT))
+    # --- jitted engine: full grid ------------------------------------------
+    use_jit = _HAS_JAX
+    evaluate_design_space(grid, a_h, a_v, use_jit=use_jit)  # compile
+    sweep_bus_power(grid, comb_h, comb_v, aspects, use_jit=use_jit)
+    t_eval = min(
+        _timed(lambda: evaluate_design_space(grid, a_h, a_v, use_jit=use_jit))
+        for _ in range(3)
+    )
+    t_sweep = min(
+        _timed(lambda: sweep_bus_power(grid, comb_h, comb_v, aspects, use_jit=use_jit))
+        for _ in range(3)
+    )
+    ev = evaluate_design_space(grid, a_h, a_v, use_jit=use_jit)
+    surf = sweep_bus_power(grid, comb_h, comb_v, aspects, use_jit=use_jit)
+    t_vec = t_eval + t_sweep
+    vec_rate = n_cells / t_vec
+    out.append(
+        {
+            "name": "design_space/engine",
+            "us_per_call": t_vec * 1e6 / n_cells,
+            "derived": (
+                f"jit={use_jit} {vec_rate:,.0f} points/s "
+                f"(eval {t_eval*1e3:.1f}ms + sweep {t_sweep*1e3:.1f}ms for {n_cells} cells)"
+            ),
+        }
+    )
+
+    # --- scalar-API baseline on a sampled subset ---------------------------
+    rng = np.random.default_rng(0)
+    sample = rng.choice(p, size=min(p, 8), replace=False)
+    t0 = time.perf_counter()
+    scalar_results = {
+        int(i): _scalar_point_eval(grid, int(i), a_h, a_v, comb_h, comb_v, aspects)
+        for i in sample
+    }
+    t_scalar = time.perf_counter() - t0
+    scalar_rate = len(sample) * s / t_scalar
+    speedup = vec_rate / scalar_rate
+    out.append(
+        {
+            "name": "design_space/scalar_baseline",
+            "us_per_call": t_scalar * 1e6 / (len(sample) * s),
+            "derived": f"{scalar_rate:,.0f} points/s over {len(sample)} sampled configs",
+        }
+    )
+    out.append(
+        {
+            "name": "design_space/speedup",
+            "us_per_call": 0.0,
+            "derived": f"{speedup:.1f}x vs scalar loop (target >={SPEEDUP_TARGET:.0f}x full)",
+        }
+    )
+
+    # --- verify the engine against the scalar closed forms -----------------
+    max_rel = 0.0
+    for i, (robust_s, mr_s, sweep_s) in scalar_results.items():
+        for w in range(a_h.shape[0]):
+            av = float(a_v[w, i])
+            if grid.bus_invert[i]:
+                av = bus_invert_activity(av, int(grid.b_v_data[i]))
+            act = BusActivity(float(a_h[w, i]), av)
+            geom = grid.geometry(i)
+            opt_s = optimal_aspect_power(geom, act)
+            p_s = bus_power(geom, act, opt_s)
+            max_rel = max(
+                max_rel,
+                abs(float(ev.aspect_opt[w, i]) - opt_s) / opt_s,
+                abs(float(ev.bus_power_opt[w, i]) - p_s) / p_s,
+            )
+        np.testing.assert_allclose(surf[i], sweep_s, rtol=2e-4)
+        # regret curves are flat near the optimum: compare achieved regret
+        assert float(ev.max_regret[i]) <= mr_s * (1 + 5e-3) + 1e-6, (
+            f"engine robust point worse than scalar at {i}: "
+            f"{float(ev.max_regret[i]):.6f} vs {mr_s:.6f}"
+        )
+    assert max_rel < 2e-4, f"scalar/vector divergence {max_rel:.2e}"
+    out.append(
+        {
+            "name": "design_space/parity",
+            "us_per_call": 0.0,
+            "derived": f"max rel err vs scalar closed forms {max_rel:.1e} (n={len(sample)})",
+        }
+    )
+    if smoke:
+        assert speedup >= SPEEDUP_FLOOR_SMOKE, (
+            f"smoke speedup {speedup:.1f}x below floor {SPEEDUP_FLOOR_SMOKE}x"
+        )
+    else:
+        assert n_cells >= 100_000, f"full grid too small: {n_cells}"
+        if use_jit:
+            assert speedup >= SPEEDUP_TARGET, (
+                f"speedup {speedup:.1f}x below target {SPEEDUP_TARGET}x"
+            )
+
+    # --- Pareto frontier over (bus power, area, worst-case regret) ---------
+    mask = ev.pareto()
+    assert mask.any(), "empty Pareto frontier"
+    idx = np.flatnonzero(mask)
+    best_p = idx[np.argmin(ev.bus_power_robust[idx])]
+    best_r = idx[np.argmin(ev.max_regret[idx])]
+    out.append(
+        {
+            "name": "design_space/pareto",
+            "us_per_call": 0.0,
+            "derived": (
+                f"frontier {mask.sum()}/{p}; min-power {grid.describe(int(best_p))} "
+                f"W/H*={float(ev.aspect_robust[best_p]):.2f}; "
+                f"min-regret {grid.describe(int(best_r))} "
+                f"regret={float(ev.max_regret[best_r])*100:.2f}%"
+            ),
+        }
+    )
+
+    # --- legacy closed-form composition row (continuity with older runs) ---
+    geom = SystolicArrayGeometry.paper_32x32()
+    act = BusActivity.paper_resnet50()
+    geom2, act2 = bus_invert_geometry(geom, act)
+    p_square = bus_power(geom, act, 1.0)
+    p_asym = bus_power(geom, act, optimal_aspect_power(geom, act))
     p_both = bus_power(geom2, act2, optimal_aspect_power(geom2, act2))
     out.append(
         {
             "name": "design_space/bus_invert_plus_asym",
             "us_per_call": 0.0,
             "derived": (
-                f"a_v {ACT.a_v:.2f}->{act2.a_v:.3f}; bus power vs square: "
+                f"a_v {act.a_v:.2f}->{act2.a_v:.3f}; bus power vs square: "
                 f"asym-only -{(1-p_asym/p_square)*100:.1f}%, "
                 f"BI+asym -{(1-p_both/p_square)*100:.1f}%"
             ),
@@ -103,6 +279,12 @@ def run() -> list[dict]:
     return out
 
 
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run(smoke=True):
         print(r)

@@ -4,12 +4,16 @@ Prints ``name,us_per_call,derived`` CSV. Exit code 1 if any module fails.
 
 ``python -m benchmarks.run --smoke`` runs every module in its cheap
 configuration (subsampled profiles, fewer repeats) — a CI-sized smoke pass.
+``--json PATH`` additionally writes the rows (plus per-module status) as a
+JSON document; CI uploads it as a workflow artifact so regressions can be
+diffed across runs.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
 
@@ -41,10 +45,14 @@ def main(argv: list[str] | None = None) -> None:
     parser.add_argument(
         "--smoke", action="store_true", help="cheap configuration for CI smoke runs"
     )
+    parser.add_argument(
+        "--json", metavar="PATH", default=None, help="also write results as JSON"
+    )
     args = parser.parse_args(argv)
 
     print("name,us_per_call,derived")
     failed = False
+    report: dict = {"smoke": args.smoke, "modules": {}, "rows": []}
     for name, mod in MODULES:
         try:
             kwargs = {}
@@ -53,9 +61,23 @@ def main(argv: list[str] | None = None) -> None:
             for row in mod.run(**kwargs):
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']},{derived}")
+                report["rows"].append(
+                    {
+                        "name": row["name"],
+                        "us_per_call": float(row["us_per_call"]),
+                        "derived": str(row["derived"]),
+                    }
+                )
+            report["modules"][name] = "ok"
         except Exception:
             failed = True
-            print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}")
+            err = traceback.format_exc(limit=1).splitlines()[-1]
+            print(f"{name},ERROR,{err}")
+            report["modules"][name] = f"ERROR: {err}"
+    report["failed"] = failed
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
     if failed:
         sys.exit(1)
 

@@ -16,6 +16,14 @@ from repro.core.energy import (  # noqa: F401
     compare_sym_asym,
     power_breakdown,
 )
+from repro.core.design_space import (  # noqa: F401
+    DesignGrid,
+    DesignSpace,
+    DesignSpaceEval,
+    evaluate_design_space,
+    pareto_mask,
+    sweep_bus_power,
+)
 from repro.core.switching import (  # noqa: F401
     ActivityProfile,
     clear_profile_cache,

@@ -9,8 +9,28 @@ Asymmetric Systolic Array Floorplanning", 2023):
   * Eq. 6:   power-optimal PE aspect ratio   ``W/H = (B_v a_v) / (B_h a_h)``.
 
 All lengths are in micrometers, areas in um^2, powers in watts unless noted.
-The model is closed-form; a numeric golden-section optimizer is provided so
-property tests can cross-check the closed form against brute-force search.
+
+Array-first layout
+------------------
+The analytical core is a set of ``*_arr`` kernels: pure functions over
+broadcastable arrays of the geometry fields (rows, cols, b_h, b_v,
+pe_area), activities (a_h, a_v) and aspect ratios. They are
+backend-agnostic — given numpy inputs they compute in float64 numpy; given
+jax arrays (or tracers, i.e. under ``jax.jit``) they compute with
+``jax.numpy`` and are fully jit/vmap-compatible (no Python branching on
+values). ``repro.core.design_space`` evaluates whole design grids through
+them in a handful of jitted programs.
+
+The original scalar API (``SystolicArrayGeometry``/``BusActivity``
+dataclasses + float-returning functions) is preserved as thin wrappers over
+the same kernels, so results are bit-for-bit the kernels' float64 numpy
+path.
+
+Practical aspect envelope
+-------------------------
+Physically realizable standard-cell floorplans bound the PE aspect ratio;
+``optimal_aspect_power`` clamps every branch (including the general Eq. 6
+form) to ``[ASPECT_MIN, ASPECT_MAX] = [1/16, 16]``.
 """
 
 from __future__ import annotations
@@ -19,7 +39,11 @@ import dataclasses
 import math
 from typing import Callable, Sequence
 
+import numpy as np
+
 __all__ = [
+    "ASPECT_MIN",
+    "ASPECT_MAX",
     "SystolicArrayGeometry",
     "BusActivity",
     "pe_dims_from_aspect",
@@ -35,7 +59,39 @@ __all__ = [
     "numeric_optimal_aspect",
     "sweep_aspects",
     "accumulator_width",
+    # vectorized kernels
+    "pe_dims_arr",
+    "wirelength_h_arr",
+    "wirelength_v_arr",
+    "wirelength_total_arr",
+    "optimal_aspect_wirelength_arr",
+    "optimal_aspect_power_arr",
+    "bus_switched_capacitance_arr",
+    "bus_power_arr",
+    "bus_power_ratio_vs_square_arr",
+    "golden_section_minimize_arr",
 ]
+
+# Practical envelope for physically realizable standard-cell placements.
+ASPECT_MIN = 1.0 / 16.0
+ASPECT_MAX = 16.0
+# Backwards-compatible aliases (pre-refactor private names).
+_ASPECT_MIN = ASPECT_MIN
+_ASPECT_MAX = ASPECT_MAX
+
+
+def _xp(*xs):
+    """Array namespace for the given operands: ``jax.numpy`` if any operand
+    is a jax array or tracer (so kernels trace cleanly under ``jax.jit``),
+    plain ``numpy`` otherwise (so the scalar wrappers stay float64-exact and
+    jax-free)."""
+    for x in xs:
+        mod = type(x).__module__
+        if mod.startswith("jax") or mod.startswith("jaxlib"):
+            import jax.numpy as jnp
+
+            return jnp
+    return np
 
 
 def accumulator_width(input_bits: int, rows: int) -> int:
@@ -98,25 +154,194 @@ class BusActivity:
         return cls(a_h=0.22, a_v=0.36)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized kernels (broadcastable arrays; numpy or jax.numpy)
+# ---------------------------------------------------------------------------
+
+
+def pe_dims_arr(pe_area, aspect, xp=None):
+    """(W, H) for PEs of area ``pe_area`` and aspect ratio ``W/H = aspect``."""
+    xp = xp or _xp(pe_area, aspect)
+    h = xp.sqrt(pe_area / aspect)
+    w = pe_area / h
+    return w, h
+
+
+def wirelength_h_arr(rows, cols, b_h, pe_area, aspect, xp=None):
+    """Eq. 1: WL_h = R * C * (W * B_h)  [um of wire]."""
+    xp = xp or _xp(rows, pe_area, aspect)
+    w, _ = pe_dims_arr(pe_area, aspect, xp=xp)
+    return rows * cols * w * b_h
+
+
+def wirelength_v_arr(rows, cols, b_v, pe_area, aspect, xp=None):
+    """Eq. 2: WL_v = R * C * (H * B_v)  [um of wire]."""
+    xp = xp or _xp(rows, pe_area, aspect)
+    _, h = pe_dims_arr(pe_area, aspect, xp=xp)
+    return rows * cols * h * b_v
+
+
+def wirelength_total_arr(rows, cols, b_h, b_v, pe_area, aspect, xp=None):
+    """Eq. 3/4: WL = R*C*(W*B_h + H*B_v)."""
+    xp = xp or _xp(rows, pe_area, aspect)
+    return wirelength_h_arr(rows, cols, b_h, pe_area, aspect, xp=xp) + wirelength_v_arr(
+        rows, cols, b_v, pe_area, aspect, xp=xp
+    )
+
+
+def optimal_aspect_wirelength_arr(b_h, b_v, xp=None):
+    """Eq. 5: the wirelength-optimal aspect ratio W/H = B_v / B_h."""
+    xp = xp or _xp(b_h, b_v)
+    return b_v / xp.asarray(b_h)
+
+
+def optimal_aspect_power_arr(
+    b_h, b_v, a_h, a_v, lo: float = ASPECT_MIN, hi: float = ASPECT_MAX, xp=None
+):
+    """Eq. 6, envelope-clamped and branchless over arrays.
+
+    With x = B_h a_h and y = B_v a_v the power-optimal aspect is y/x; the
+    degenerate limits (one or both directions never toggle) resolve to the
+    envelope bound on the still-toggling side, or to the Eq. 5 wirelength
+    optimum when nothing toggles.  Every branch is clamped to the practical
+    envelope ``[lo, hi]`` (default ``[ASPECT_MIN, ASPECT_MAX]``).
+    """
+    xp = xp or _xp(b_h, b_v, a_h, a_v)
+    x = b_h * a_h
+    y = b_v * a_v
+    x_pos = x > 0
+    raw = xp.where(
+        x_pos,
+        y / xp.where(x_pos, x, 1.0),
+        xp.where(y > 0, hi, b_v / xp.asarray(b_h)),
+    )
+    return xp.clip(raw, lo, hi)
+
+
+def bus_switched_capacitance_arr(
+    rows, cols, b_h, b_v, pe_area, a_h, a_v, aspect, wire_cap_f_per_um=0.20e-15, xp=None
+):
+    """Average switched wire capacitance per cycle [F] (see ``bus_power``)."""
+    xp = xp or _xp(rows, pe_area, a_h, aspect)
+    return wire_cap_f_per_um * (
+        a_h * wirelength_h_arr(rows, cols, b_h, pe_area, aspect, xp=xp)
+        + a_v * wirelength_v_arr(rows, cols, b_v, pe_area, aspect, xp=xp)
+    )
+
+
+def bus_power_arr(
+    rows,
+    cols,
+    b_h,
+    b_v,
+    pe_area,
+    a_h,
+    a_v,
+    aspect,
+    vdd=0.9,
+    freq_hz=1.0e9,
+    wire_cap_f_per_um=0.20e-15,
+    xp=None,
+):
+    """Dynamic H/V data-bus power [W]; broadcastable over every argument."""
+    xp = xp or _xp(rows, pe_area, a_h, aspect)
+    c_sw = bus_switched_capacitance_arr(
+        rows, cols, b_h, b_v, pe_area, a_h, a_v, aspect, wire_cap_f_per_um, xp=xp
+    )
+    return 0.5 * c_sw * vdd * vdd * freq_hz
+
+
+def bus_power_ratio_vs_square_arr(b_h, b_v, a_h, a_v, xp=None):
+    """P_bus(envelope-clamped optimal aspect) / P_bus(square).
+
+    With x = B_h a_h, y = B_v a_v the bus power at aspect r is proportional
+    to ``x sqrt(r) + y / sqrt(r)`` (the geometry prefactor cancels in the
+    ratio).  When the Eq. 6 optimum y/x lies inside the envelope this equals
+    the AM-GM gap ``2 sqrt(xy) / (x + y) <= 1``; outside, the ratio is
+    evaluated at the clamped boundary aspect.  Zero-activity designs report
+    1.0 (no dynamic power to save).
+    """
+    xp = xp or _xp(b_h, b_v, a_h, a_v)
+    x = b_h * a_h
+    y = b_v * a_v
+    opt = optimal_aspect_power_arr(b_h, b_v, a_h, a_v, xp=xp)
+    s = xp.sqrt(opt)
+    denom = x + y
+    safe = xp.where(denom > 0, denom, 1.0)
+    return xp.where(denom > 0, (x * s + y / s) / safe, 1.0)
+
+
+def golden_section_minimize_arr(fn, lo, hi, iters: int = 64, xp=None):
+    """Elementwise golden-section minimizer over an array of intervals.
+
+    ``fn`` maps an array of probe points (broadcast of ``lo``/``hi``) to
+    objective values of the same shape; each element's objective must be
+    unimodal on its [lo, hi].  Runs a fixed ``iters`` iterations — the
+    surviving interior probe is carried so each iteration costs ONE ``fn``
+    evaluation; the interval shrinks by phi^-1 per step (64 iterations
+    reach ~1e-13 of the initial interval) — so the loop is branch-free and
+    traces once under ``jax.jit``.
+    """
+    xp = xp or _xp(lo, hi)
+    a = xp.asarray(lo) + 0.0
+    b = xp.asarray(hi) + 0.0
+    a, b = xp.broadcast_arrays(a, b)
+    invphi = (math.sqrt(5.0) - 1.0) / 2.0
+    c = b - invphi * (b - a)
+    d = a + invphi * (b - a)
+    fc, fd = fn(c), fn(d)
+
+    def step(a, b, c, d, fc, fd):
+        take_left = fc < fd
+        a2 = xp.where(take_left, a, c)
+        b2 = xp.where(take_left, d, b)
+        # keep-left reuses c as the new d; keep-right reuses d as the new c
+        c2 = xp.where(take_left, b2 - invphi * (b2 - a2), d)
+        d2 = xp.where(take_left, c, a2 + invphi * (b2 - a2))
+        f_new = fn(xp.where(take_left, c2, d2))
+        fc2 = xp.where(take_left, f_new, fd)
+        fd2 = xp.where(take_left, fc, f_new)
+        return a2, b2, c2, d2, fc2, fd2
+
+    if xp is np:
+        for _ in range(iters):
+            a, b, c, d, fc, fd = step(a, b, c, d, fc, fd)
+    else:
+        # Trace the contraction once instead of unrolling ``iters`` copies —
+        # keeps jit compile time flat in the iteration count.
+        from jax import lax
+
+        a, b, c, d, fc, fd = lax.fori_loop(
+            0, iters, lambda _, s: step(*s), (a, b, c, d, fc, fd)
+        )
+    return 0.5 * (a + b)
+
+
+# ---------------------------------------------------------------------------
+# Scalar API — thin wrappers over the kernels (numpy float64 path)
+# ---------------------------------------------------------------------------
+
+
 def pe_dims_from_aspect(geom: SystolicArrayGeometry, aspect: float) -> tuple[float, float]:
     """Return (W, H) in um for a PE of area A with aspect ratio ``W/H = aspect``."""
     if aspect <= 0:
         raise ValueError("aspect ratio must be positive")
-    h = math.sqrt(geom.pe_area_um2 / aspect)
-    w = geom.pe_area_um2 / h
-    return w, h
+    w, h = pe_dims_arr(geom.pe_area_um2, aspect, xp=np)
+    return float(w), float(h)
 
 
 def wirelength_h(geom: SystolicArrayGeometry, aspect: float) -> float:
     """Eq. 1: WL_h = R * C * (W * B_h)  [um of wire]."""
-    w, _ = pe_dims_from_aspect(geom, aspect)
-    return geom.rows * geom.cols * w * geom.b_h
+    return float(
+        wirelength_h_arr(geom.rows, geom.cols, geom.b_h, geom.pe_area_um2, aspect, xp=np)
+    )
 
 
 def wirelength_v(geom: SystolicArrayGeometry, aspect: float) -> float:
     """Eq. 2: WL_v = R * C * (H * B_v)  [um of wire]."""
-    _, h = pe_dims_from_aspect(geom, aspect)
-    return geom.rows * geom.cols * h * geom.b_v
+    return float(
+        wirelength_v_arr(geom.rows, geom.cols, geom.b_v, geom.pe_area_um2, aspect, xp=np)
+    )
 
 
 def wirelength_total(geom: SystolicArrayGeometry, aspect: float) -> float:
@@ -126,31 +351,23 @@ def wirelength_total(geom: SystolicArrayGeometry, aspect: float) -> float:
 
 def optimal_aspect_wirelength(geom: SystolicArrayGeometry) -> float:
     """Eq. 5: the wirelength-optimal aspect ratio W/H = B_v / B_h."""
-    return geom.b_v / geom.b_h
+    return float(optimal_aspect_wirelength_arr(geom.b_h, geom.b_v, xp=np))
 
 
 def optimal_aspect_power(geom: SystolicArrayGeometry, act: BusActivity) -> float:
-    """Eq. 6: the power-optimal aspect ratio W/H = (B_v a_v) / (B_h a_h).
+    """Eq. 6: the power-optimal aspect ratio W/H = (B_v a_v) / (B_h a_h),
+    clamped to the practical envelope ``[ASPECT_MIN, ASPECT_MAX]``.
 
-    Falls back to the wirelength optimum when either activity is zero (a
-    direction with no toggling contributes no dynamic power, so only the
-    toggling direction's wirelength matters; the limit of Eq. 6 is then
-    unbounded — we clamp to the pure-wirelength optimum scaled by the active
-    direction, which is the paper's Eq. 5 behavior for a_h == a_v).
+    Degenerate activities fall back gracefully: if only one direction
+    toggles, dynamic bus power is monotonic in the other direction's span
+    and the result clamps to the envelope bound (``ASPECT_MAX`` when only
+    the vertical bus toggles, ``ASPECT_MIN`` when only the horizontal one
+    does); if neither toggles, the Eq. 5 wirelength optimum (clamped) is
+    returned.  The general Eq. 6 branch is clamped to the same envelope —
+    extreme ``B_v a_v / (B_h a_h)`` ratios otherwise prescribe physically
+    unrealizable standard-cell placements.
     """
-    if act.a_h == 0.0 and act.a_v == 0.0:
-        return optimal_aspect_wirelength(geom)
-    if act.a_h == 0.0 or act.a_v == 0.0:
-        # Degenerate: one direction never toggles. Dynamic bus power is then
-        # monotonic in the other direction's span; physical floorplans bound
-        # the aspect ratio, so clamp to a practical envelope.
-        return _ASPECT_MAX if act.a_h == 0.0 else _ASPECT_MIN
-    return (geom.b_v * act.a_v) / (geom.b_h * act.a_h)
-
-
-# Practical envelope for physically realizable standard-cell placements.
-_ASPECT_MIN = 1.0 / 16.0
-_ASPECT_MAX = 16.0
+    return float(optimal_aspect_power_arr(geom.b_h, geom.b_v, act.a_h, act.a_v, xp=np))
 
 
 def bus_switched_capacitance_per_cycle(
@@ -164,8 +381,19 @@ def bus_switched_capacitance_per_cycle(
     C_sw = a_h * WL_h * c_wire + a_v * WL_v * c_wire.  This is the quantity the
     aspect ratio actually optimizes; power is 1/2 * C_sw * V^2 * f.
     """
-    return wire_cap_f_per_um * (
-        act.a_h * wirelength_h(geom, aspect) + act.a_v * wirelength_v(geom, aspect)
+    return float(
+        bus_switched_capacitance_arr(
+            geom.rows,
+            geom.cols,
+            geom.b_h,
+            geom.b_v,
+            geom.pe_area_um2,
+            act.a_h,
+            act.a_v,
+            aspect,
+            wire_cap_f_per_um,
+            xp=np,
+        )
     )
 
 
@@ -178,27 +406,34 @@ def bus_power(
     wire_cap_f_per_um: float = 0.20e-15,
 ) -> float:
     """Dynamic power dissipated on the H/V data buses [W] at a given aspect."""
-    c_sw = bus_switched_capacitance_per_cycle(geom, act, aspect, wire_cap_f_per_um)
-    return 0.5 * c_sw * vdd * vdd * freq_hz
+    return float(
+        bus_power_arr(
+            geom.rows,
+            geom.cols,
+            geom.b_h,
+            geom.b_v,
+            geom.pe_area_um2,
+            act.a_h,
+            act.a_v,
+            aspect,
+            vdd,
+            freq_hz,
+            wire_cap_f_per_um,
+            xp=np,
+        )
+    )
 
 
 def bus_power_ratio_vs_square(geom: SystolicArrayGeometry, act: BusActivity) -> float:
-    """P_bus(optimal aspect) / P_bus(square).
+    """P_bus(envelope-clamped optimal aspect) / P_bus(square).
 
-    Closed form: with x = B_h a_h, y = B_v a_v, the square layout dissipates
-    ∝ (x + y) while the optimal rectangle dissipates ∝ 2 sqrt(x y); the ratio
-    is the AM-GM gap 2 sqrt(xy)/(x+y) ≤ 1 (equality iff x == y, i.e. the array
-    is already balanced and square IS optimal).
+    Equals the AM-GM gap ``2 sqrt(xy)/(x+y)`` (x = B_h a_h, y = B_v a_v)
+    whenever the Eq. 6 optimum lies inside the practical envelope; see
+    ``bus_power_ratio_vs_square_arr``.
     """
-    x = geom.b_h * act.a_h
-    y = geom.b_v * act.a_v
-    if x == 0.0 and y == 0.0:
-        return 1.0
-    if x == 0.0 or y == 0.0:
-        # Unbounded improvement in theory; report the envelope-clamped ratio.
-        opt = optimal_aspect_power(geom, act)
-        return bus_power(geom, act, opt) / bus_power(geom, act, 1.0)
-    return 2.0 * math.sqrt(x * y) / (x + y)
+    return float(
+        bus_power_ratio_vs_square_arr(geom.b_h, geom.b_v, act.a_h, act.a_v, xp=np)
+    )
 
 
 def golden_section_minimize(
@@ -208,7 +443,10 @@ def golden_section_minimize(
     tol: float = 1e-10,
     max_iter: int = 200,
 ) -> float:
-    """Golden-section search for the minimizer of a unimodal ``fn`` on [lo, hi]."""
+    """Golden-section search for the minimizer of a unimodal ``fn`` on [lo, hi].
+
+    Scalar tolerance-based variant (the batched fixed-iteration form is
+    ``golden_section_minimize_arr``)."""
     if not (lo < hi):
         raise ValueError("need lo < hi")
     invphi = (math.sqrt(5.0) - 1.0) / 2.0
@@ -233,14 +471,16 @@ def golden_section_minimize(
 def numeric_optimal_aspect(
     geom: SystolicArrayGeometry,
     act: BusActivity,
-    lo: float = 1.0 / 64.0,
-    hi: float = 64.0,
+    lo: float = ASPECT_MIN,
+    hi: float = ASPECT_MAX,
 ) -> float:
     """Brute-force (golden-section, in log-space) power-optimal aspect ratio.
 
     Used by property tests to validate the closed-form Eq. 6. The objective
     P(aspect) = k1 * sqrt(aspect) + k2 / sqrt(aspect) is unimodal in
-    log(aspect), so golden-section search is exact up to tolerance.
+    log(aspect), so golden-section search is exact up to tolerance.  The
+    default search window is the practical envelope — matching the clamped
+    closed form (an out-of-envelope optimum converges to the boundary).
     """
 
     def objective(log_aspect: float) -> float:

@@ -19,20 +19,30 @@
    activity is computable in closed form from the binomial pmf. Applying BI
    to the vertical bus lowers a_v (and widens B_v by 1), shifting Eq. 6 —
    the two techniques compose, and this module quantifies the joint win.
+
+Array-first layout: the ``*_arr`` kernels (``regret_arr``,
+``max_regret_arr``, ``minimax_aspect_arr``, ``bus_invert_activity_arr``)
+broadcast over geometry/activity/aspect arrays and are jit-compatible; the
+scalar API wraps their float64 numpy path (see ``repro.core.floorplan``).
+``repro.core.design_space`` drives them over whole design grids.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal, Sequence
 
+import numpy as np
+
 from repro.core.floorplan import (
+    ASPECT_MAX,
+    ASPECT_MIN,
     BusActivity,
     SystolicArrayGeometry,
-    bus_power,
-    golden_section_minimize,
-    optimal_aspect_power,
+    _xp,
+    bus_power_arr,
+    golden_section_minimize_arr,
+    optimal_aspect_power_arr,
 )
 from repro.core.switching import ActivityProfile, combine_profiles
 
@@ -42,7 +52,16 @@ __all__ = [
     "os_dataflow_geometry",
     "bus_invert_activity",
     "bus_invert_geometry",
+    # vectorized kernels
+    "regret_arr",
+    "max_regret_arr",
+    "minimax_aspect_arr",
+    "bus_invert_activity_arr",
 ]
+
+# Widest bus the toggle model supports (``switching._to_bus_repr`` contract);
+# bounds the static binomial-support axis of the vectorized BI kernel.
+_MAX_BUS_BITS = 64
 
 
 # ---------------------------------------------------------------------------
@@ -50,16 +69,66 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def _regret(geom, act: BusActivity, aspect: float) -> float:
-    """P(aspect) / P(workload's own optimum) - 1 for one workload."""
-    own = optimal_aspect_power(geom, act)
-    return bus_power(geom, act, aspect) / bus_power(geom, act, own) - 1.0
+def _power_shape(b_h, b_v, a_h, a_v, aspect, xp):
+    """Bus power up to the positive geometry prefactor: x sqrt(r) + y/sqrt(r).
+
+    The prefactor (R C sqrt(A) c_wire V^2 f / 2) is aspect-independent, so
+    ratios of this shape function equal ratios of ``bus_power_arr``.
+    """
+    s = xp.sqrt(aspect)
+    return (b_h * a_h) * s + (b_v * a_v) / s
+
+
+def regret_arr(b_h, b_v, a_h, a_v, aspect, lo=ASPECT_MIN, hi=ASPECT_MAX, xp=None):
+    """P(aspect) / P(own envelope-clamped optimum) - 1, elementwise.
+
+    Zero-activity elements (no dynamic power at any aspect) report zero
+    regret.
+    """
+    xp = xp or _xp(b_h, b_v, a_h, a_v, aspect)
+    own = optimal_aspect_power_arr(b_h, b_v, a_h, a_v, lo=lo, hi=hi, xp=xp)
+    p = _power_shape(b_h, b_v, a_h, a_v, aspect, xp)
+    p_own = _power_shape(b_h, b_v, a_h, a_v, own, xp)
+    return xp.where(p_own > 0, p / xp.where(p_own > 0, p_own, 1.0) - 1.0, 0.0)
+
+
+def max_regret_arr(
+    b_h, b_v, a_h, a_v, aspect, lo=ASPECT_MIN, hi=ASPECT_MAX, axis=0, xp=None
+):
+    """Worst-case regret across the workload axis (default: axis 0)."""
+    xp = xp or _xp(b_h, b_v, a_h, a_v, aspect)
+    return xp.max(regret_arr(b_h, b_v, a_h, a_v, aspect, lo=lo, hi=hi, xp=xp), axis=axis)
+
+
+def minimax_aspect_arr(
+    b_h, b_v, a_h, a_v, lo=ASPECT_MIN, hi=ASPECT_MAX, iters: int = 64, xp=None
+):
+    """Batched minimax-regret aspect: per design point, the aspect minimizing
+    the worst-case regret over the leading workload axis of ``a_h``/``a_v``.
+
+    ``a_h``/``a_v`` have shape (W, ...); the result drops the workload axis.
+    Golden-section search over log-aspect (the max of unimodal-in-log
+    objectives with a shared minimum basin; cross-checked against dense grids
+    in the tests).
+    """
+    xp = xp or _xp(b_h, b_v, a_h, a_v)
+    log_lo = xp.log(xp.asarray(lo) + 0.0 * xp.max(a_h, axis=0))
+    log_hi = xp.log(xp.asarray(hi) + 0.0 * xp.max(a_h, axis=0))
+
+    def objective(log_a):
+        return max_regret_arr(
+            b_h, b_v, a_h, a_v, xp.exp(log_a)[None, ...], lo=lo, hi=hi, axis=0, xp=xp
+        )
+
+    return xp.exp(golden_section_minimize_arr(objective, log_lo, log_hi, iters=iters, xp=xp))
 
 
 def max_regret(
     geom: SystolicArrayGeometry, acts: Sequence[BusActivity], aspect: float
 ) -> float:
-    return max(_regret(geom, a, aspect) for a in acts)
+    a_h = np.asarray([a.a_h for a in acts])
+    a_v = np.asarray([a.a_v for a in acts])
+    return float(max_regret_arr(geom.b_h, geom.b_v, a_h, a_v, aspect, xp=np))
 
 
 def robust_design_point(
@@ -73,30 +142,45 @@ def robust_design_point(
     'average'  — Eq. 6 at the transition-weighted mean activities (paper).
     'weighted' — minimize the weighted mean bus power (explicit app mix).
     'minimax'  — minimize the worst-case regret over workloads.
+
+    All strategies respect the practical aspect envelope
+    ``[ASPECT_MIN, ASPECT_MAX]``.
     """
     if not profiles:
         raise ValueError("no workload profiles")
-    acts = [p.as_bus_activity() for p in profiles]
+    a_h = np.asarray([p.a_h for p in profiles])
+    a_v = np.asarray([p.a_v for p in profiles])
     if strategy == "average":
+        from repro.core.floorplan import optimal_aspect_power
+
         return optimal_aspect_power(geom, combine_profiles(profiles).as_bus_activity())
     if strategy == "weighted":
-        w = list(weights) if weights is not None else [1.0] * len(acts)
-        if len(w) != len(acts):
+        w = np.asarray(weights if weights is not None else np.ones(len(profiles)), float)
+        if w.shape != (len(profiles),):
             raise ValueError("weights/profiles length mismatch")
 
-        def objective(log_a: float) -> float:
-            a = math.exp(log_a)
-            return sum(wi * bus_power(geom, ai, a) for wi, ai in zip(w, acts))
+        def objective(log_a):
+            p = bus_power_arr(
+                geom.rows,
+                geom.cols,
+                geom.b_h,
+                geom.b_v,
+                geom.pe_area_um2,
+                a_h,
+                a_v,
+                np.exp(log_a),
+                xp=np,
+            )
+            return np.sum(w * p, axis=0)
 
-        return math.exp(golden_section_minimize(objective, math.log(1 / 64), math.log(64)))
+        log_opt = golden_section_minimize_arr(
+            objective, np.log(ASPECT_MIN), np.log(ASPECT_MAX), iters=80, xp=np
+        )
+        return float(np.exp(log_opt))
     if strategy == "minimax":
-        # max-regret is unimodal in log-aspect (max of unimodal functions
-        # with a common domain); golden-section suffices in practice and the
-        # tests cross-check against a dense grid.
-        def objective(log_a: float) -> float:
-            return max_regret(geom, acts, math.exp(log_a))
-
-        return math.exp(golden_section_minimize(objective, math.log(1 / 64), math.log(64)))
+        return float(
+            minimax_aspect_arr(geom.b_h, geom.b_v, a_h, a_v, iters=80, xp=np)
+        )
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -126,6 +210,66 @@ def os_dataflow_geometry(
 # ---------------------------------------------------------------------------
 
 
+def bus_invert_activity_arr(a, bits, xp=None):
+    """Vectorized expected per-bit activity under bus-invert coding.
+
+    Broadcasts over ``a`` (per-bit toggle probabilities in [0, 1]) and
+    ``bits`` (data bus widths, <= 64).  The binomial pmf of the Hamming
+    distance d ~ Binomial(b, a) is evaluated in LOG space —
+    ``logC(b, d) + d log a + (b - d) log(1 - a)`` with the log-binomial
+    built by a cumulative-sum recurrence — so activities arbitrarily close
+    to 0 or 1 stay finite (the naive pmf recurrence seeds with
+    ``(1-a)**b``, which underflows to exactly 0 for a near 1 and poisons
+    every term).  The endpoints are exact: a=0 -> 0 coded activity,
+    a=1 -> 1/(b+1) (the invert line toggles every cycle, the data lines
+    never).
+    """
+    xp = xp or _xp(a, bits)
+    a = xp.asarray(a) + 0.0
+    b = xp.asarray(bits) + 0.0
+    a, b = xp.broadcast_arrays(a, b)
+    eps = xp.finfo(b.dtype).tiny
+    a_in = xp.clip(a, eps, 1.0 - xp.finfo(b.dtype).eps)
+    log_a = xp.log(a_in)
+    log_1ma = xp.log1p(-a_in)
+
+    # Stream the binomial support d = 1.._MAX_BUS_BITS (the widest bus the
+    # toggle model takes), carrying the log-binomial recurrence
+    # log C(b, d) = log C(b, d-1) + log(b - d + 1) - log(d) — entries beyond
+    # each element's own b drop to log-probability -inf.  Streaming keeps the
+    # working set at O(broadcast shape) instead of O(shape x 65), so million-
+    # point design grids stay cheap.  The d = 0 term has cost min(0, b+1) = 0
+    # and never contributes.
+    def step(d, log_binom, acc):
+        valid = d <= b
+        log_binom = xp.where(
+            valid, log_binom + xp.log(xp.where(valid, b - d + 1.0, 1.0)) - xp.log(d), -xp.inf
+        )
+        # BI transmits inverted data when d > (b+1)/2: the coded (b+1)-wire
+        # bus toggles min(d, b+1-d) wires.  pmf is exactly 0 beyond d = b,
+        # so the clamped cost there contributes nothing.
+        pmf = xp.exp(log_binom + d * log_a + (b - d) * log_1ma)
+        cost = xp.maximum(xp.minimum(d + 0.0 * b, b + 1.0 - d), 0.0)
+        return log_binom, acc + pmf * cost
+
+    log_binom = xp.zeros_like(b)
+    acc = xp.zeros_like(b)
+    if xp is np:
+        for d in range(1, _MAX_BUS_BITS + 1):
+            log_binom, acc = step(float(d), log_binom, acc)
+    else:
+        from jax import lax
+
+        log_binom, acc = lax.fori_loop(
+            1,
+            _MAX_BUS_BITS + 1,
+            lambda d, s: step(d * 1.0, *s),
+            (log_binom, acc),
+        )
+    coded = acc / (b + 1.0)
+    return xp.where(a <= 0.0, 0.0, xp.where(a >= 1.0, 1.0 / (b + 1.0), coded))
+
+
 def bus_invert_activity(a: float, bits: int) -> float:
     """Expected per-bit activity of a b-bit bus under bus-invert coding.
 
@@ -133,20 +277,14 @@ def bus_invert_activity(a: float, bits: int) -> float:
     BI transmits inverted data when d > (b+1)/2, so the coded bus (b data
     lines + 1 invert line) toggles min(d, b+1-d) of its b+1 wires. Returns
     expected toggles / (b+1) wires — directly comparable to the uncoded a.
+    Evaluated stably in log space (``bus_invert_activity_arr``); the result
+    always satisfies ``coded <= a`` and the endpoints are exact.
     """
     if not 0.0 <= a <= 1.0:
         raise ValueError("activity must be in [0,1]")
-    b = bits
-    # E[min(d, b+1-d)] over d ~ Binomial(b, a)
-    exp_toggles = 0.0
-    pmf = (1.0 - a) ** b  # P(d=0)
-    for d in range(0, b + 1):
-        if d > 0:
-            pmf *= (b - d + 1) / d * (a / (1.0 - a)) if a < 1.0 else 1.0
-        if a >= 1.0:
-            pmf = 1.0 if d == b else 0.0
-        exp_toggles += pmf * min(d, b + 1 - d)
-    return exp_toggles / (b + 1)
+    if not 1 <= bits <= _MAX_BUS_BITS:
+        raise ValueError(f"bits must be in [1, {_MAX_BUS_BITS}]")
+    return float(bus_invert_activity_arr(a, bits, xp=np))
 
 
 def bus_invert_geometry(

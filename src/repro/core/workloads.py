@@ -31,6 +31,7 @@ __all__ = [
     "conv_layer_job",
     "gemm_job",
     "profile_network",
+    "measured_design_activities",
     "gemms_for_arch",
 ]
 
@@ -283,6 +284,111 @@ def profile_network(
     ]
     profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
     return (profiles, stats) if return_stats else profiles
+
+
+def measured_design_activities(
+    grid,
+    layers: Sequence[ConvLayer] = RESNET50_TABLE1,
+    *,
+    profile_cols: int | None = None,
+    backend: str | None = None,
+    use_cache: bool = True,
+    return_stats: bool = False,
+):
+    """Measured (W, P) activity arrays for a whole design grid.
+
+    The profile→design-grid adapter: activities under the WS stream model
+    depend only on the *activity class* ``(rows, b_h, b_v_data)`` of a
+    design point, never on its column count, PE area, or coding flag —
+
+      * horizontal: each input lane's stream is a column of ``a`` whatever
+        the tiling; the h toggle total scales with ``ceil(N/cols)`` exactly
+        as its transition denominator does (PR 2's geometry-pass reuse), so
+        ``a_h`` is (rows, cols)-invariant given the quantization width;
+      * vertical: column tiling regroups, never changes, the per-column
+        partial-sum streams, so ``a_v`` depends on ``rows`` (reduction
+        depth) and the bus width only;
+      * bus-invert is an activity *transform* applied later, inside the
+        design-space evaluation, on ``b_v_data`` bits.
+
+    So ONE profiling job per activity class per workload layer feeds every
+    point of the grid: a few ``run_profile_batch`` passes (content-deduped
+    against the shared sha256 cache) serve thousands-to-millions of design
+    points.  Output-stationary points stream *operands* on both axes; their
+    vertical activity is approximated by the measured horizontal operand
+    activity (``a_v := a_h``, the analytical convention of
+    ``optimize.os_dataflow_geometry``) — and since ``a_h`` is b_v-invariant,
+    OS points attach to any class sharing (rows, b_h) and add no profiling
+    passes of their own unless no WS twin exists.
+
+    Returns ``(a_h, a_v)`` of shape (len(layers), grid.n_points) — plus the
+    ``BatchStats`` with ``return_stats=True``.  Layer i is profiled with
+    ``seed=i`` (the ``profile_network`` convention, so cache entries are
+    shared with every other consumer).
+    """
+    from repro.core.pipeline import run_profile_batch
+
+    layers = list(layers)
+    if not layers:
+        raise ValueError("no workload layers")
+    os_mask = np.asarray(grid.dataflow_os, bool)
+    keys = np.stack(
+        [
+            np.asarray(grid.rows),
+            np.asarray(grid.b_h),
+            np.asarray(grid.b_v_data),
+            os_mask.astype(np.int64),
+        ],
+        axis=1,
+    )
+    uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
+    # OS points only consume a_h, which is b_v-invariant — attach them to any
+    # class sharing (rows, b_h) instead of profiling a bits-wide vertical bus
+    # whose results would be discarded.  WS combos first so they define the
+    # classes OS combos piggyback on.
+    classes: list[tuple[int, int, int]] = []
+    class_index: dict[tuple[int, int, int], int] = {}
+    by_rows_bits: dict[tuple[int, int], int] = {}
+    uniq_class = np.empty(len(uniq), np.int64)
+    for is_os in (0, 1):
+        for u, (r, b_h, b_v, os_flag) in enumerate(uniq):
+            if os_flag != is_os:
+                continue
+            key = (int(r), int(b_h), int(b_v))
+            idx = class_index.get(key)
+            if idx is None and is_os:
+                idx = by_rows_bits.get((key[0], key[1]))
+            if idx is None:
+                idx = len(classes)
+                classes.append(key)
+                class_index[key] = idx
+                by_rows_bits.setdefault((key[0], key[1]), idx)
+            uniq_class[u] = idx
+    cols_fix = int(profile_cols) if profile_cols is not None else int(np.min(grid.cols))
+    jobs = [
+        conv_layer_job(
+            layer,
+            rows=r,
+            cols=cols_fix,
+            bits=b_h,
+            b_v=b_v,
+            seed=i,
+        )
+        for (r, b_h, b_v) in classes
+        for i, layer in enumerate(layers)
+    ]
+    profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
+    n_layers = len(layers)
+    class_a_h = np.asarray(
+        [[profiles[c * n_layers + w].a_h for c in range(len(classes))] for w in range(n_layers)]
+    )
+    class_a_v = np.asarray(
+        [[profiles[c * n_layers + w].a_v for c in range(len(classes))] for w in range(n_layers)]
+    )
+    point_class = uniq_class[inverse]
+    a_h = class_a_h[:, point_class]
+    a_v = np.where(os_mask[None, :], a_h, class_a_v[:, point_class])
+    return (a_h, a_v, stats) if return_stats else (a_h, a_v)
 
 
 def gemms_for_arch(cfg, seq_len: int, batch: int = 1) -> list[Gemm]:

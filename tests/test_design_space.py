@@ -1,0 +1,335 @@
+"""Design-space engine: grid expansion, jitted evaluation vs the scalar API,
+Pareto extraction vs the O(n^2) oracle, measured-profile coupling."""
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro.core.design_space import (
+    DesignSpace,
+    evaluate_design_space,
+    pareto_mask,
+    sweep_bus_power,
+)
+from repro.core.energy import power_breakdown
+from repro.core.floorplan import (
+    ASPECT_MAX,
+    ASPECT_MIN,
+    BusActivity,
+    accumulator_width,
+    bus_power,
+    optimal_aspect_power,
+)
+from repro.core.optimize import bus_invert_activity, max_regret
+
+SPACE = DesignSpace(
+    rows=(8, 32),
+    cols=(8, 16),
+    input_bits=(8, 16),
+    dataflows=("WS", "OS"),
+    bus_invert=(False, True),
+    pe_area_um2=(900.0, 1200.0),
+)
+GRID = SPACE.expand()
+
+rng = np.random.default_rng(7)
+W = 3
+A_H = np.broadcast_to(rng.uniform(0.1, 0.4, (W, 1)), (W, GRID.n_points)).copy()
+A_V = np.broadcast_to(rng.uniform(0.2, 0.6, (W, 1)), (W, GRID.n_points)).copy()
+
+
+def _oracle_pareto(obj):
+    le = (obj[:, None, :] <= obj[None, :, :]).all(-1)
+    lt = (obj[:, None, :] < obj[None, :, :]).any(-1)
+    return ~(le & lt).any(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Expansion
+# ---------------------------------------------------------------------------
+
+
+def test_expand_cross_product_and_bus_widths():
+    assert SPACE.n_points == GRID.n_points == 2 * 2 * 2 * 2 * 2 * 2
+    for i in range(GRID.n_points):
+        r, bits = int(GRID.rows[i]), int(GRID.b_h[i])
+        want_data = bits if GRID.dataflow_os[i] else accumulator_width(bits, r)
+        assert int(GRID.b_v_data[i]) == want_data
+        assert int(GRID.b_v[i]) == want_data + int(GRID.bus_invert[i])
+    # every combination appears exactly once
+    combos = set(
+        zip(GRID.rows, GRID.cols, GRID.b_h, GRID.dataflow_os, GRID.bus_invert, GRID.pe_area_um2)
+    )
+    assert len(combos) == GRID.n_points
+
+
+def test_scalar_axes_auto_promote():
+    sp = DesignSpace(rows=32, cols=32, input_bits=16)
+    assert sp.rows == (32,) and sp.n_points == 1
+    g = sp.expand()
+    assert int(g.b_v[0]) == accumulator_width(16, 32)
+    assert g.geometry(0).b_v == int(g.b_v[0])
+
+
+def test_expand_validation():
+    with pytest.raises(ValueError):
+        DesignSpace(rows=(0,), cols=(8,))
+    with pytest.raises(ValueError):
+        DesignSpace(rows=(8,), cols=(8,), dataflows=("XX",))
+    with pytest.raises(ValueError):
+        DesignSpace(rows=(2**30,), cols=(8,), input_bits=(32,))  # >64-bit sums
+
+
+# ---------------------------------------------------------------------------
+# Evaluation vs the scalar API (float64 numpy path: tight tolerances)
+# ---------------------------------------------------------------------------
+
+
+def test_eval_matches_scalar_api_pointwise():
+    ev = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    for i in range(GRID.n_points):
+        geom = GRID.geometry(i)
+        acts = []
+        for w in range(W):
+            a_v_eff = (
+                bus_invert_activity(float(A_V[w, i]), int(GRID.b_v_data[i]))
+                if GRID.bus_invert[i]
+                else float(A_V[w, i])
+            )
+            assert float(ev.a_v_eff[w, i]) == pytest.approx(a_v_eff, rel=1e-12)
+            act = BusActivity(float(A_H[w, i]), a_v_eff)
+            acts.append(act)
+            assert float(ev.aspect_opt[w, i]) == optimal_aspect_power(geom, act)
+            assert float(ev.bus_power_opt[w, i]) == pytest.approx(
+                bus_power(geom, act, float(ev.aspect_opt[w, i])), rel=1e-12
+            )
+            assert float(ev.bus_power_sym[w, i]) == pytest.approx(
+                bus_power(geom, act, 1.0), rel=1e-12
+            )
+        # numeric cross-check of the closed form inside the engine
+        assert np.allclose(ev.aspect_opt_gss[:, i], ev.aspect_opt[:, i], rtol=1e-6)
+        # robust point: achieved worst-case regret matches the scalar oracle
+        # and cannot beat (nor significantly lose to) a dense grid scan
+        mr = float(ev.max_regret[i])
+        assert mr == pytest.approx(
+            max_regret(geom, acts, float(ev.aspect_robust[i])), rel=1e-9, abs=1e-12
+        )
+        grid_aspects = np.exp(
+            np.linspace(np.log(ASPECT_MIN), np.log(ASPECT_MAX), 801)
+        )
+        grid_best = min(max_regret(geom, acts, float(a)) for a in grid_aspects)
+        assert mr <= grid_best + 1e-7
+        # aggregate powers are the uniform workload means
+        assert float(ev.bus_power_square[i]) == pytest.approx(
+            np.mean([bus_power(geom, a, 1.0) for a in acts]), rel=1e-12
+        )
+        assert float(ev.area_um2[i]) == pytest.approx(
+            geom.rows * geom.cols * geom.pe_area_um2, rel=1e-12
+        )
+
+
+def test_eval_savings_match_energy_model():
+    ev = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    for i in (0, 13, GRID.n_points - 1):
+        geom = GRID.geometry(i)
+        robust = float(ev.aspect_robust[i])
+        sym_i = asym_i = comp = 0.0
+        for w in range(W):
+            act = BusActivity(float(A_H[w, i]), float(ev.a_v_eff[w, i]))
+            b_sym = power_breakdown(geom, act, 1.0)
+            b_asym = power_breakdown(geom, act, robust)
+            sym_i += b_sym.interconnect_w
+            asym_i += b_asym.interconnect_w
+            comp += b_sym.compute_w
+        assert float(ev.interconnect_saving[i]) == pytest.approx(
+            1.0 - asym_i / sym_i, rel=1e-9
+        )
+        assert float(ev.total_saving[i]) == pytest.approx(
+            1.0 - (asym_i + comp) / (sym_i + comp), rel=1e-9
+        )
+
+
+def test_eval_jit_matches_numpy_path():
+    pytest.importorskip("jax")
+    ev_np = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    ev_j = evaluate_design_space(GRID, A_H, A_V, use_jit=True)
+    assert np.allclose(ev_j.aspect_opt, ev_np.aspect_opt, rtol=1e-4)
+    assert np.allclose(ev_j.bus_power_opt, ev_np.bus_power_opt, rtol=1e-4)
+    assert np.allclose(ev_j.aspect_robust, ev_np.aspect_robust, rtol=1e-3)
+    assert np.allclose(ev_j.max_regret, ev_np.max_regret, rtol=1e-2, atol=1e-5)
+    assert np.allclose(ev_j.bus_power_robust, ev_np.bus_power_robust, rtol=1e-4)
+    assert np.allclose(ev_j.interconnect_saving, ev_np.interconnect_saving, atol=1e-4)
+    assert np.allclose(ev_j.total_saving, ev_np.total_saving, atol=1e-4)
+
+
+def test_eval_activity_broadcasting_and_weights():
+    # scalar and (P,) activities broadcast to one workload row
+    ev_s = evaluate_design_space(GRID, 0.22, 0.36, use_jit=False)
+    assert ev_s.aspect_opt.shape == (1, GRID.n_points)
+    ev_p = evaluate_design_space(
+        GRID, np.full(GRID.n_points, 0.22), np.full(GRID.n_points, 0.36), use_jit=False
+    )
+    assert np.allclose(ev_s.aspect_opt, ev_p.aspect_opt)
+    # degenerate weights select a single workload
+    ev_one = evaluate_design_space(GRID, A_H[:1], A_V[:1], use_jit=False)
+    ev_wt = evaluate_design_space(
+        GRID, A_H, A_V, weights=[1.0, 0.0, 0.0], use_jit=False
+    )
+    assert np.allclose(ev_wt.bus_power_square, ev_one.bus_power_square)
+    with pytest.raises(ValueError):
+        evaluate_design_space(GRID, A_H, A_V, weights=[1.0], use_jit=False)
+    with pytest.raises(ValueError):
+        evaluate_design_space(GRID, 1.5, 0.3, use_jit=False)  # activity > 1
+
+
+def test_sweep_matches_scalar_bus_power():
+    aspects = np.exp(np.linspace(np.log(ASPECT_MIN), np.log(ASPECT_MAX), 9))
+    a_h, a_v = A_H.mean(axis=0), A_V.mean(axis=0)
+    surf = sweep_bus_power(GRID, a_h, a_v, aspects, use_jit=False)
+    assert surf.shape == (GRID.n_points, len(aspects))
+    for i in (0, 7, GRID.n_points - 1):
+        geom = GRID.geometry(i)
+        a_v_eff = (
+            bus_invert_activity(float(a_v[i]), int(GRID.b_v_data[i]))
+            if GRID.bus_invert[i]
+            else float(a_v[i])
+        )
+        act = BusActivity(float(a_h[i]), a_v_eff)
+        for s, asp in enumerate(aspects):
+            assert float(surf[i, s]) == pytest.approx(
+                bus_power(geom, act, float(asp)), rel=1e-12
+            )
+
+
+# ---------------------------------------------------------------------------
+# Pareto extraction
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_mask_matches_oracle_random():
+    r = np.random.default_rng(3)
+    for n, d in ((1, 2), (40, 2), (301, 3), (1500, 3), (97, 4)):
+        obj = r.random((n, d)).round(2)  # rounding forces ties + duplicates
+        got = pareto_mask(obj, chunk=64)
+        assert np.array_equal(got, _oracle_pareto(obj)), (n, d)
+
+
+def test_pareto_mask_edges():
+    assert pareto_mask(np.zeros((0, 3))).shape == (0,)
+    # identical rows: none dominates another -> all kept
+    obj = np.ones((5, 2))
+    assert pareto_mask(obj).all()
+    # a single strictly-better row dominates everything
+    obj = np.vstack([np.ones((5, 2)), [[0.5, 0.5]]])
+    assert pareto_mask(obj).tolist() == [False] * 5 + [True]
+    with pytest.raises(ValueError):
+        pareto_mask(np.asarray([[np.inf, 0.0]]))
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    data=st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 5), st.integers(0, 5)),
+        min_size=1,
+        max_size=60,
+    )
+)
+def test_pareto_mask_matches_oracle_hypothesis(data):
+    obj = np.asarray(data, float)
+    assert np.array_equal(pareto_mask(obj, chunk=7), _oracle_pareto(obj))
+
+
+def test_eval_pareto_is_nonempty_and_nondominated():
+    ev = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    mask = ev.pareto()
+    assert mask.any()
+    obj = ev.objectives()
+    assert np.array_equal(mask, _oracle_pareto(obj))
+    assert ev.grid.select(mask).n_points == int(mask.sum())
+
+
+# ---------------------------------------------------------------------------
+# Measured-profile coupling (tiny layers; exercises run_profile_batch)
+# ---------------------------------------------------------------------------
+
+TINY = None
+
+
+def _tiny_layers():
+    from repro.core.workloads import ConvLayer
+
+    return [
+        ConvLayer("T1", k=1, h=8, w=8, c=48, m=24, input_density=0.5),
+        ConvLayer("T2", k=1, h=6, w=6, c=64, m=32, input_density=0.4),
+    ]
+
+
+def test_measured_activities_map_classes_onto_grid():
+    from repro.core.workloads import measured_design_activities, profile_conv_layer
+
+    sp = DesignSpace(
+        rows=(4, 8), cols=(4, 8, 16), input_bits=(8,), bus_invert=(False, True)
+    )
+    grid = sp.expand()
+    layers = _tiny_layers()
+    a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
+    assert a_h.shape == a_v.shape == (len(layers), grid.n_points)
+    assert (0 <= a_h).all() and (a_h <= 1).all() and (0 <= a_v).all() and (a_v <= 1).all()
+    # one job per (rows, b_h, b_v_data) class per layer — the cols and
+    # bus-invert axes ride for free
+    assert stats.jobs == 2 * len(layers)
+    # activities are cols-invariant: identical across the cols axis
+    for c in (8, 16):
+        assert np.array_equal(a_h[:, grid.cols == 4], a_h[:, grid.cols == c])
+        assert np.array_equal(a_v[:, grid.cols == 4], a_v[:, grid.cols == c])
+    # ... and match the serial per-layer profiler (same operands, same seeds)
+    for r in (4, 8):
+        sel = np.asarray(grid.rows == r)
+        for i, layer in enumerate(layers):
+            p = profile_conv_layer(layer, rows=r, cols=4, bits=8, seed=i)
+            assert np.allclose(a_h[i, sel], p.a_h)
+            assert np.allclose(a_v[i, sel], p.a_v)
+
+
+def test_measured_activities_os_points_use_operand_activity():
+    from repro.core.workloads import measured_design_activities
+
+    sp = DesignSpace(rows=(4,), cols=(4,), input_bits=(8,), dataflows=("WS", "OS"))
+    grid = sp.expand()
+    layers = _tiny_layers()[:1]
+    a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
+    os_sel = np.asarray(grid.dataflow_os)
+    assert np.array_equal(a_v[:, os_sel], a_h[:, os_sel])
+    assert not np.array_equal(a_v[:, ~os_sel], a_h[:, ~os_sel])
+    # a_h is b_v-invariant, so OS points piggyback on the WS class instead of
+    # paying profiling jobs for a bits-wide vertical bus nobody reads
+    assert stats.jobs == len(layers)
+    # ... unless no WS twin exists: an OS-only space profiles its own class
+    _, _, st_os = measured_design_activities(
+        DesignSpace(rows=(4,), cols=(4,), input_bits=(8,), dataflows=("OS",)).expand(),
+        layers,
+        return_stats=True,
+    )
+    assert st_os.jobs == len(layers)
+
+
+def test_measured_end_to_end_evaluation():
+    """Measured activities -> jitted engine -> non-empty Pareto frontier."""
+    from repro.core.workloads import measured_design_activities
+
+    sp = DesignSpace(rows=(4, 8), cols=(4, 16), input_bits=(8,), bus_invert=(False, True))
+    grid = sp.expand()
+    a_h, a_v = measured_design_activities(grid, _tiny_layers())
+    ev = evaluate_design_space(grid, a_h, a_v, use_jit=False)
+    assert np.isfinite(ev.bus_power_robust).all()
+    assert (ev.max_regret >= -1e-12).all()
+    assert ev.pareto().any()
+    # bus-invert points must never pay more optimal bus power than their
+    # uncoded twins (BI lowers a_v and adds one wire; the optimum adapts)
+    bi = np.asarray(grid.bus_invert)
+    order = np.lexsort(
+        (bi, np.asarray(grid.cols), np.asarray(grid.rows))
+    )  # pairs (uncoded, coded) adjacent
+    pts = order.reshape(-1, 2)
+    for plain, coded in pts:
+        assert (ev.a_v_eff[:, coded] <= ev.a_v_eff[:, plain] + 1e-12).all()

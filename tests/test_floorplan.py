@@ -5,18 +5,27 @@ import math
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
+import numpy as np
+
 from repro.core.floorplan import (
+    ASPECT_MAX,
+    ASPECT_MIN,
     BusActivity,
     SystolicArrayGeometry,
     accumulator_width,
     bus_power,
+    bus_power_arr,
     bus_power_ratio_vs_square,
+    bus_power_ratio_vs_square_arr,
+    golden_section_minimize_arr,
     numeric_optimal_aspect,
     optimal_aspect_power,
+    optimal_aspect_power_arr,
     optimal_aspect_wirelength,
     pe_dims_from_aspect,
     wirelength_h,
     wirelength_total,
+    wirelength_total_arr,
     wirelength_v,
 )
 
@@ -61,17 +70,18 @@ acts = st.builds(
 @settings(deadline=None, max_examples=60)
 @given(geom=geoms, act=acts)
 def test_closed_form_matches_numeric_minimizer(geom, act):
-    """Eq. 6 equals brute-force golden-section search on the power curve."""
+    """Envelope-clamped Eq. 6 equals golden-section search over the envelope
+    (an out-of-envelope optimum converges to the clamped boundary)."""
     closed = optimal_aspect_power(geom, act)
-    if not (1 / 64 < closed < 64):  # numeric search window
-        return
+    assert ASPECT_MIN <= closed <= ASPECT_MAX
     numeric = numeric_optimal_aspect(geom, act)
     assert numeric == pytest.approx(closed, rel=1e-4)
 
 
 @settings(deadline=None, max_examples=60)
-@given(geom=geoms, act=acts, aspect=st.floats(0.05, 20.0))
+@given(geom=geoms, act=acts, aspect=st.floats(ASPECT_MIN, ASPECT_MAX))
 def test_optimal_aspect_never_worse_than_any_other(geom, act, aspect):
+    """The clamped optimum beats every other aspect INSIDE the envelope."""
     opt = optimal_aspect_power(geom, act)
     assert bus_power(geom, act, opt) <= bus_power(geom, act, aspect) * (1 + 1e-9)
 
@@ -79,14 +89,29 @@ def test_optimal_aspect_never_worse_than_any_other(geom, act, aspect):
 @settings(deadline=None, max_examples=60)
 @given(geom=geoms, act=acts)
 def test_amgm_ratio_formula(geom, act):
-    """P_opt / P_square == 2 sqrt(xy)/(x+y) with x=B_h a_h, y=B_v a_v."""
+    """P_opt / P_square == 2 sqrt(xy)/(x+y) while Eq. 6 stays in the
+    envelope; at the clamped boundary the ratio matches the boundary power."""
     x = geom.b_h * act.a_h
     y = geom.b_v * act.a_v
-    want = 2 * math.sqrt(x * y) / (x + y)
     opt = optimal_aspect_power(geom, act)
     got = bus_power(geom, act, opt) / bus_power(geom, act, 1.0)
-    assert got == pytest.approx(want, rel=1e-9)
-    assert bus_power_ratio_vs_square(geom, act) == pytest.approx(want, rel=1e-9)
+    if ASPECT_MIN < y / x < ASPECT_MAX:
+        want = 2 * math.sqrt(x * y) / (x + y)
+        assert got == pytest.approx(want, rel=1e-9)
+    else:
+        assert opt in (ASPECT_MIN, ASPECT_MAX)
+    assert bus_power_ratio_vs_square(geom, act) == pytest.approx(got, rel=1e-9)
+
+
+def test_envelope_clamps_general_branch():
+    """Extreme B_v a_v / (B_h a_h) ratios clamp to the practical envelope."""
+    g = SystolicArrayGeometry(rows=8, cols=8, b_h=1, b_v=64)
+    assert optimal_aspect_power(g, BusActivity(0.01, 1.0)) == ASPECT_MAX
+    g2 = SystolicArrayGeometry(rows=8, cols=8, b_h=64, b_v=1)
+    assert optimal_aspect_power(g2, BusActivity(1.0, 0.01)) == ASPECT_MIN
+    # degenerate branches land on the same envelope
+    assert optimal_aspect_power(g, BusActivity(0.0, 0.5)) == ASPECT_MAX
+    assert optimal_aspect_power(g, BusActivity(0.5, 0.0)) == ASPECT_MIN
 
 
 @settings(deadline=None, max_examples=40)
@@ -113,3 +138,81 @@ def test_square_is_optimal_iff_balanced():
     act = BusActivity(a_h=0.2, a_v=0.4)  # x = 4.0, y = 4.0
     assert optimal_aspect_power(g, act) == pytest.approx(1.0)
     assert bus_power_ratio_vs_square(g, act) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized-kernel vs scalar-wrapper parity (the scalar API is a thin shim
+# over the same kernels; stacking inputs into arrays must reproduce each
+# scalar result bit-for-bit on the float64 numpy path)
+# ---------------------------------------------------------------------------
+
+batch = st.lists(
+    st.tuples(
+        st.integers(2, 256),  # rows
+        st.integers(2, 256),  # cols
+        st.integers(1, 64),  # b_h
+        st.integers(1, 64),  # b_v
+        st.floats(10.0, 1e5),  # pe_area
+        st.floats(0.0, 1.0),  # a_h (0 included: degenerate branch)
+        st.floats(0.0, 1.0),  # a_v
+        st.floats(ASPECT_MIN, ASPECT_MAX),  # aspect
+    ),
+    min_size=1,
+    max_size=16,
+)
+
+
+def _stack(points):
+    cols = list(zip(*points))
+    return [np.asarray(c) for c in cols]
+
+
+@settings(deadline=None, max_examples=40)
+@given(points=batch)
+def test_vectorized_kernels_match_scalar_wrappers_bitwise(points):
+    rows, cols, b_h, b_v, area, a_h, a_v, aspect = _stack(points)
+    opt_vec = optimal_aspect_power_arr(b_h, b_v, a_h, a_v)
+    pow_vec = bus_power_arr(rows, cols, b_h, b_v, area, a_h, a_v, aspect)
+    wl_vec = wirelength_total_arr(rows, cols, b_h, b_v, area, aspect)
+    ratio_vec = bus_power_ratio_vs_square_arr(b_h, b_v, a_h, a_v)
+    for i, (r, c, bh, bv, ar, ah, av, asp) in enumerate(points):
+        geom = SystolicArrayGeometry(rows=r, cols=c, b_h=bh, b_v=bv, pe_area_um2=ar)
+        act = BusActivity(a_h=ah, a_v=av)
+        assert float(opt_vec[i]) == optimal_aspect_power(geom, act)
+        assert float(pow_vec[i]) == bus_power(geom, act, asp)
+        assert float(wl_vec[i]) == wirelength_total(geom, asp)
+        assert float(ratio_vec[i]) == bus_power_ratio_vs_square(geom, act)
+
+
+def test_batched_golden_section_minimizes_elementwise():
+    """Each element converges to its own minimizer (here: min of (x-t)^2)."""
+    targets = np.asarray([-2.0, 0.0, 0.5, 3.0])
+    got = golden_section_minimize_arr(
+        lambda x: (x - targets) ** 2, -5.0, 5.0, iters=80
+    )
+    assert np.allclose(got, targets, atol=1e-8)
+
+
+def test_kernels_jit_compatible():
+    """The same kernels trace under jax.jit (float32 tolerances)."""
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+
+    b_h = jnp.asarray([16.0, 8.0])
+    b_v = jnp.asarray([37.0, 21.0])
+    a_h = jnp.asarray([0.22, 0.0])
+    a_v = jnp.asarray([0.36, 0.3])
+    got = jax.jit(optimal_aspect_power_arr)(b_h, b_v, a_h, a_v)
+    want = [
+        optimal_aspect_power(
+            SystolicArrayGeometry(4, 4, int(h), int(v)), BusActivity(float(x), float(y))
+        )
+        for h, v, x, y in zip(b_h, b_v, a_h, a_v)
+    ]
+    assert np.allclose(np.asarray(got), want, rtol=1e-5)
+    p = jax.jit(bus_power_arr)(
+        jnp.asarray([32.0]), jnp.asarray([32.0]), b_h[:1], b_v[:1],
+        jnp.asarray([1200.0]), a_h[:1], a_v[:1], jnp.asarray([3.8]),
+    )
+    want_p = bus_power(SystolicArrayGeometry.paper_32x32(), BusActivity(0.22, 0.36), 3.8)
+    assert np.allclose(np.asarray(p), want_p, rtol=1e-5)

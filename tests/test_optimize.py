@@ -15,8 +15,11 @@ from repro.core.floorplan import (
 )
 from repro.core.optimize import (
     bus_invert_activity,
+    bus_invert_activity_arr,
     bus_invert_geometry,
     max_regret,
+    max_regret_arr,
+    minimax_aspect_arr,
     os_dataflow_geometry,
     robust_design_point,
 )
@@ -86,6 +89,62 @@ def test_bus_invert_known_limits():
     # exact small case: b=1, a=0.5 -> d in {0,1} equally; min(d, 2-d) in {0,1}
     # -> E = 0.5 over 2 wires = 0.25
     assert bus_invert_activity(0.5, 1) == pytest.approx(0.25)
+
+
+def test_bus_invert_endpoints_exact():
+    """a=0: nothing toggles; a=1: every data line would flip every cycle, so
+    BI always sends the inverted word — only the invert line toggles."""
+    for bits in (1, 4, 16, 37, 64):
+        assert bus_invert_activity(0.0, bits) == 0.0
+        assert bus_invert_activity(1.0, bits) == pytest.approx(1.0 / (bits + 1))
+
+
+@settings(deadline=None, max_examples=60)
+@given(a=st.floats(0.0, 1.0), bits=st.integers(1, 64))
+def test_bus_invert_invariant_coded_at_most_uncoded(a, bits):
+    """E[min(d, b+1-d)]/(b+1) <= a: BI coding never raises the activity."""
+    coded = bus_invert_activity(a, bits)
+    assert 0.0 <= coded <= a + 1e-12
+
+
+def test_bus_invert_stable_near_one():
+    """The naive pmf recurrence seeds with (1-a)**b == 0.0 for a near 1 and
+    returns exactly 0; the log-space form stays finite and approaches the
+    exact a=1 limit 1/(b+1) from above-zero."""
+    for bits in (16, 37, 48, 64):
+        coded = bus_invert_activity(1.0 - 1e-12, bits)
+        assert coded > 0.0
+        assert coded == pytest.approx(1.0 / (bits + 1), rel=1e-3)
+    # monotone tail: approaching 1 converges smoothly to the endpoint
+    vals = [bus_invert_activity(a, 37) for a in (0.99, 0.999, 0.9999, 1.0)]
+    assert all(v > 0 for v in vals)
+    assert abs(vals[-2] - vals[-1]) < 1e-3
+
+
+def test_bus_invert_vectorized_matches_scalar():
+    a = np.linspace(0.0, 1.0, 23)
+    bits = np.asarray([1, 7, 16, 37, 64])
+    vec = bus_invert_activity_arr(a[:, None], bits[None, :])
+    for i, ai in enumerate(a):
+        for j, bj in enumerate(bits):
+            assert float(vec[i, j]) == bus_invert_activity(float(ai), int(bj))
+
+
+def test_vectorized_minimax_matches_scalar_robust_point():
+    acts = [p.as_bus_activity() for p in PROFILES]
+    a_h = np.asarray([a.a_h for a in acts])
+    a_v = np.asarray([a.a_v for a in acts])
+    d_scalar = robust_design_point(GEOM, PROFILES, "minimax")
+    d_vec = float(minimax_aspect_arr(GEOM.b_h, GEOM.b_v, a_h, a_v, iters=80))
+    # compare achieved objectives (the regret curve is flat near the optimum)
+    mr_s = max_regret(GEOM, acts, d_scalar)
+    mr_v = float(max_regret_arr(GEOM.b_h, GEOM.b_v, a_h, a_v, d_vec))
+    assert mr_v == pytest.approx(mr_s, rel=1e-6, abs=1e-9)
+    # batched: stacking the same point twice returns the same aspect twice
+    both = minimax_aspect_arr(
+        GEOM.b_h, GEOM.b_v, np.stack([a_h, a_h], -1), np.stack([a_v, a_v], -1), iters=80
+    )
+    assert np.allclose(both, d_vec)
 
 
 def test_bus_invert_composes_with_floorplan():
