@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.switching import clear_profile_cache, profile_ws_gemm
+from repro.core.switching import clear_profile_cache, profile_gemm
 from repro.core.quant import quantize_symmetric
 from repro.core.workloads import (
     RESNET50_TABLE1,
@@ -52,9 +52,9 @@ def run(smoke: bool = False) -> list[dict]:
         g, a, w = _operands(layer, seed=i)
         kwargs = dict(rows=ROWS, cols=COLS, b_h=BITS, b_v=B_V, use_cache=False)
         # warm the fused engine's compile cache before timing
-        p_fused = profile_ws_gemm(a, w, backend="pallas", **kwargs)
-        us_np, p_np = _best_us(lambda: profile_ws_gemm(a, w, backend="numpy", **kwargs), repeat)
-        us_fused, p_fused = _best_us(lambda: profile_ws_gemm(a, w, backend="pallas", **kwargs), repeat)
+        p_fused = profile_gemm(a, w, backend="pallas", **kwargs)
+        us_np, p_np = _best_us(lambda: profile_gemm(a, w, backend="numpy", **kwargs), repeat)
+        us_fused, p_fused = _best_us(lambda: profile_gemm(a, w, backend="pallas", **kwargs), repeat)
         agree = (
             abs(p_np.a_h - p_fused.a_h) < 1e-9
             and abs(p_np.a_v - p_fused.a_v) < 1e-9
@@ -99,8 +99,8 @@ def run(smoke: bool = False) -> list[dict]:
     # content-keyed cache: second identical profile is a dictionary hit
     clear_profile_cache()
     g, a, w = _operands(layers[0], seed=0)
-    profile_ws_gemm(a, w, ROWS, COLS, BITS, B_V)
-    us_hit, _ = _best_us(lambda: profile_ws_gemm(a, w, ROWS, COLS, BITS, B_V), repeat=3)
+    profile_gemm(a, w, ROWS, COLS, BITS, B_V)
+    us_hit, _ = _best_us(lambda: profile_gemm(a, w, ROWS, COLS, BITS, B_V), repeat=3)
     out.append(
         {
             "name": "activity_profile/cache_hit",

@@ -1,13 +1,19 @@
 """Design-space exploration through the jitted array-first engine.
 
-Builds a declarative ``DesignSpace`` (rows x cols x input bits x bus-invert
-x PE area), couples it to MEASURED network activity profiles (one
-``run_profile_batch`` pass per (rows, b_h, b_v) activity class feeds the
-whole cols/area/coding cross product), evaluates the full grid — per-point
-Eq. 6 optima, batched log-space golden-section cross-checks, vectorized
-minimax-regret across the workload axis, calibrated savings, plus the
-(P, S) aspect-sweep surface — and extracts the Pareto frontier over
-(bus power, area, worst-case regret).
+Builds a declarative ``DesignSpace`` (rows x cols x input bits x WS/OS
+dataflow x bus-invert x PE area), couples it to MEASURED network activity
+profiles (one ``run_profile_batch`` pass per activity class feeds the whole
+cols/area/coding cross product; OS classes are geometry-free), evaluates
+the full grid — per-point Eq. 6 optima, batched log-space golden-section
+cross-checks, vectorized minimax-regret across the workload axis,
+calibrated savings, plus the (P, S) aspect-sweep surface — and extracts the
+Pareto frontier over (bus power, area, worst-case regret).
+
+The ``design_space/os_approx_error`` row quantifies the retired
+``a_v := a_h`` OS approximation: the measured-vs-approximated OS vertical
+activity delta and how many design-space winners (Pareto members, best
+points) flip once OS activities are measured from the real W-operand
+streams.
 
 Reported throughput counts *design points* — (geometry config, aspect)
 cells, the aspect being the design variable the paper is about, with the
@@ -72,6 +78,7 @@ def _space(smoke: bool) -> DesignSpace:
             rows=(4, 8),
             cols=(4, 6, 8, 12, 16, 24, 32, 48),
             input_bits=(8,),
+            dataflows=("WS", "OS"),
             bus_invert=(False, True),
             pe_area_um2=(900.0, 1200.0),
         )
@@ -79,6 +86,7 @@ def _space(smoke: bool) -> DesignSpace:
         rows=(8, 16, 32, 64),
         cols=(4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 160, 192, 224, 256, 320),
         input_bits=(8, 16),
+        dataflows=("WS", "OS"),
         bus_invert=(False, True),
         pe_area_um2=(800.0, 1000.0, 1200.0, 1600.0),
     )
@@ -136,6 +144,7 @@ def run(smoke: bool = False) -> list[dict]:
         {
             "name": "design_space/grid",
             "us_per_call": t_profile * 1e6 / max(stats.jobs, 1),
+            "dataflow": "WS+OS",
             "derived": (
                 f"{p} geometry configs x {s} aspect choices = {n_cells} design points "
                 f"(workloads={a_h.shape[0]} profile_jobs={stats.jobs} "
@@ -165,6 +174,7 @@ def run(smoke: bool = False) -> list[dict]:
         {
             "name": "design_space/engine",
             "us_per_call": t_vec * 1e6 / n_cells,
+            "dataflow": "WS+OS",
             "derived": (
                 f"jit={use_jit} {vec_rate:,.0f} points/s "
                 f"(eval {t_eval*1e3:.1f}ms + sweep {t_sweep*1e3:.1f}ms for {n_cells} cells)"
@@ -245,15 +255,51 @@ def run(smoke: bool = False) -> list[dict]:
     idx = np.flatnonzero(mask)
     best_p = idx[np.argmin(ev.bus_power_robust[idx])]
     best_r = idx[np.argmin(ev.max_regret[idx])]
+    os_mask = np.asarray(grid.dataflow_os, bool)
     out.append(
         {
             "name": "design_space/pareto",
             "us_per_call": 0.0,
+            "dataflow": "WS+OS",
             "derived": (
-                f"frontier {mask.sum()}/{p}; min-power {grid.describe(int(best_p))} "
+                f"frontier {mask.sum()}/{p} (WS {int((mask & ~os_mask).sum())} / "
+                f"OS {int((mask & os_mask).sum())}); "
+                f"min-power {grid.describe(int(best_p))} "
                 f"W/H*={float(ev.aspect_robust[best_p]):.2f}; "
                 f"min-regret {grid.describe(int(best_r))} "
                 f"regret={float(ev.max_regret[best_r])*100:.2f}%"
+            ),
+        }
+    )
+
+    # --- retired OS approximation: measured vs a_v := a_h ------------------
+    # Re-evaluate the identical grid with OS vertical activities overwritten
+    # by the old convention (the A-operand's activity) and count how many
+    # design-space winners the measurement flips.
+    assert os_mask.any(), "space must contain OS points"
+    a_v_approx = np.where(os_mask[None, :], a_h, a_v)
+    delta = np.abs(a_v - a_v_approx)[:, os_mask]
+    ev_apx = evaluate_design_space(grid, a_h, a_v_approx, use_jit=use_jit)
+    mask_apx = ev_apx.pareto()
+    pareto_flips = int((mask != mask_apx).sum())
+    rank = np.argsort(np.argsort(ev.bus_power_robust))
+    rank_apx = np.argsort(np.argsort(ev_apx.bus_power_robust))
+    moved = int((rank != rank_apx).sum())
+    winner = int(np.argmin(ev.bus_power_robust))
+    winner_apx = int(np.argmin(ev_apx.bus_power_robust))
+    assert float(delta.max()) > 0.0, "measured OS a_v identical to a_h?"
+    out.append(
+        {
+            "name": "design_space/os_approx_error",
+            "us_per_call": 0.0,
+            "dataflow": "OS",
+            "derived": (
+                f"OS a_v delta mean={float(delta.mean()):.4f} "
+                f"max={float(delta.max()):.4f} over {int(os_mask.sum())} points; "
+                f"pareto_flips={pareto_flips} rank_moves={moved}/{p} "
+                f"min_power_winner {grid.describe(winner_apx)} -> "
+                f"{grid.describe(winner)}"
+                f"{' (flipped)' if winner != winner_apx else ' (unchanged)'}"
             ),
         }
     )
@@ -269,6 +315,7 @@ def run(smoke: bool = False) -> list[dict]:
         {
             "name": "design_space/bus_invert_plus_asym",
             "us_per_call": 0.0,
+            "dataflow": "WS",
             "derived": (
                 f"a_v {act.a_v:.2f}->{act2.a_v:.3f}; bus power vs square: "
                 f"asym-only -{(1-p_asym/p_square)*100:.1f}%, "

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.switching import profile_ws_gemm
+from repro.core.switching import profile_gemm
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.toggle_count.ref import stream_toggle_count_ref
 from repro.kernels.ws_matmul.ref import ws_matmul_ref
@@ -69,7 +69,7 @@ def run() -> list[dict]:
     a_np = rng.integers(0, 1000, size=(256, 64))
     w_np = rng.integers(-1000, 1000, size=(64, 64))
     t0 = time.time()
-    profile_ws_gemm(a_np, w_np, 32, 32, 16, 37, backend="numpy", use_cache=False)
+    profile_gemm(a_np, w_np, 32, 32, 16, 37, backend="numpy", use_cache=False)
     us = (time.time() - t0) * 1e6
     out.append(
         {

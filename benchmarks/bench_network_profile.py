@@ -2,8 +2,9 @@
 
 The workload is a real design-point study: exact full-stream switching
 profiles of the six ResNet50 Table I layers (int16, 32x32 array) PLUS one
-LLM architecture's GEMM set (int8, 128x128 array) — 14 GEMMs, two
-geometries. The serial baseline drives `profile_ws_gemm` one GEMM at a
+LLM architecture's GEMM set (int8, 128x128 array) PLUS output-stationary
+profiles of a layer/GEMM subset (OS jobs run as geometry-free operand
+stream passes). The serial baseline drives `profile_gemm` one GEMM at a
 time, exactly as every consumer did before the batch pipeline: a host-side
 synth/quantize, a fresh pad, a shape-specialized recompile and a blocking
 device round-trip per layer. The batched path hands the same jobs to
@@ -32,7 +33,7 @@ import time
 
 from repro.configs.registry import get_arch
 from repro.core.pipeline import run_profile_batch
-from repro.core.switching import clear_profile_cache, profile_ws_gemm
+from repro.core.switching import clear_profile_cache, profile_gemm
 from repro.core.workloads import (
     RESNET50_TABLE1,
     conv_layer_job,
@@ -53,6 +54,18 @@ def _jobs(smoke: bool):
         gemm_job(g, rows=128, cols=128, bits=8, seed=100 + i)
         for i, g in enumerate(gemms)
     ]
+    # Output-stationary jobs ride the same batch: both buses are operand
+    # streams, profiled through geometry-free stream passes.
+    os_layers = layers[:2] if smoke else layers[:3]
+    jobs += [
+        conv_layer_job(layer, seed=i, dataflow="OS")
+        for i, layer in enumerate(os_layers)
+    ]
+    if not smoke:
+        jobs += [
+            gemm_job(g, rows=128, cols=128, bits=8, seed=100 + i, dataflow="OS")
+            for i, g in enumerate(gemms[:2])
+        ]
     return jobs
 
 
@@ -61,9 +74,9 @@ def _run_serial(jobs):
     for job in jobs:
         a, w = job.operands()  # host synth + quantize: part of the real path
         out.append(
-            profile_ws_gemm(
+            profile_gemm(
                 a, w, job.rows, job.cols, job.b_h, job.b_v,
-                backend="pallas", use_cache=False,
+                dataflow=job.dataflow, backend="pallas", use_cache=False,
             )
         )
     return out
@@ -123,11 +136,13 @@ def _oracle_check(jobs, profiles, indices):
     for i in indices:
         job = jobs[i]
         a, w = job.operands()
-        ref = profile_gemm_toggles_ref(a, w, job.rows, job.cols, job.b_h, job.b_v)
+        ref = profile_gemm_toggles_ref(
+            a, w, job.rows, job.cols, job.b_h, job.b_v, dataflow=job.dataflow
+        )
         if _counts(profiles[i]) != ref:
             raise RuntimeError(
-                f"batched counts disagree with numpy oracle on {job.name}: "
-                f"{_counts(profiles[i])} vs {ref}"
+                f"batched counts disagree with numpy oracle on {job.name} "
+                f"({job.dataflow}): {_counts(profiles[i])} vs {ref}"
             )
 
 
@@ -155,20 +170,24 @@ def run(smoke: bool = False) -> list[dict]:
         if _counts(sp) != _counts(bp):
             raise RuntimeError(
                 f"batched profile disagrees with per-GEMM engine on "
-                f"{job.name}: {_counts(bp)} vs {_counts(sp)}"
+                f"{job.name} ({job.dataflow}): {_counts(bp)} vs {_counts(sp)}"
             )
-    # numpy counts oracle: whole workload in full mode, one job per
-    # geometry in smoke (the full oracle costs ~17s for Table I alone)
+    # numpy counts oracle: whole workload in full mode; in smoke one job per
+    # geometry plus one OS job (the full oracle costs ~17s for Table I alone)
     n_res = 3 if smoke else len(RESNET50_TABLE1)
-    _oracle_check(jobs, batched, [0, n_res] if smoke else range(len(jobs)))
+    _oracle_check(
+        jobs, batched, [0, n_res, len(jobs) - 1] if smoke else range(len(jobs))
+    )
 
+    n_os = sum(1 for j in jobs if j.dataflow == "OS")
     if smoke:
         return [
             {
                 "name": "network_profile/batched_inproc_smoke",
                 "us_per_call": round(t_inproc * 1e6 / len(jobs), 1),
+                "dataflow": "WS+OS",
                 "derived": (
-                    f"jobs={len(jobs)} buckets={stats.buckets} "
+                    f"jobs={len(jobs)} (OS {n_os}) buckets={stats.buckets} "
                     f"passes={stats.passes} tasks={stats.tasks} bit_exact=True"
                 ),
             }
@@ -181,14 +200,16 @@ def run(smoke: bool = False) -> list[dict]:
         {
             "name": "network_profile/serial_per_gemm_cold",
             "us_per_call": round(t_serial * 1e6 / len(jobs), 1),
+            "dataflow": "WS+OS",
             "derived": (
                 f"median={t_serial:.2f}s of {[round(x, 2) for x in serial_s]} "
-                f"jobs={len(jobs)}"
+                f"jobs={len(jobs)} (OS {n_os})"
             ),
         },
         {
             "name": "network_profile/batched_cold",
             "us_per_call": round(t_batch * 1e6 / len(jobs), 1),
+            "dataflow": "WS+OS",
             "derived": (
                 f"median={t_batch:.2f}s of {[round(x, 2) for x in batch_s]} "
                 f"speedup={speedup:.1f}x (target >=3x) "

@@ -3,10 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV. Exit code 1 if any module fails.
 
 ``python -m benchmarks.run --smoke`` runs every module in its cheap
-configuration (subsampled profiles, fewer repeats) — a CI-sized smoke pass.
+configuration (subsampled profiles, fewer repeats) — a CI-sized smoke pass
+(including the OS rows of bench_design_space and the OS jobs of
+bench_network_profile).
 ``--json PATH`` additionally writes the rows (plus per-module status) as a
 JSON document; CI uploads it as a workflow artifact so regressions can be
-diffed across runs.
+diffed across runs.  Each JSON row records a ``dataflow`` field ("WS",
+"OS", "WS+OS", or "" when the row is dataflow-agnostic).
 """
 
 from __future__ import annotations
@@ -66,6 +69,7 @@ def main(argv: list[str] | None = None) -> None:
                         "name": row["name"],
                         "us_per_call": float(row["us_per_call"]),
                         "derived": str(row["derived"]),
+                        "dataflow": str(row.get("dataflow", "")),
                     }
                 )
             report["modules"][name] = "ok"

@@ -1,10 +1,15 @@
 """Design-space exploration: measured activities -> jitted engine -> Pareto.
 
-Expands a declarative DesignSpace (geometry x input bits x bus-invert), maps
-measured Table-I activity profiles onto it (one profiling pass per
-(rows, b_h, b_v) class feeds the whole cols/coding cross product), evaluates
-every point in one jitted program, and prints the Pareto frontier over
-(workload bus power, array area, worst-case regret).
+Expands a declarative DesignSpace (geometry x input bits x WS/OS dataflow x
+bus-invert), maps measured Table-I activity profiles onto it (one profiling
+pass per activity class — (rows, b_h, b_v) for WS, geometry-free (b_h, b_v)
+for OS — feeds the whole cols/coding cross product), evaluates every point
+in one jitted program, and prints the Pareto frontier over (workload bus
+power, array area, worst-case regret), split by dataflow.
+
+OS vertical activities are MEASURED from the W-operand column streams; the
+final section re-evaluates the grid under the retired ``a_v := a_h``
+approximation and lists the design points whose ranking moved the most.
 
 Run:  PYTHONPATH=src python examples/design_space_explore.py
 """
@@ -20,13 +25,15 @@ space = DesignSpace(
     rows=(16, 32),
     cols=(8, 16, 32, 64, 128),
     input_bits=(16,),
+    dataflows=("WS", "OS"),
     bus_invert=(False, True),
 )
 grid = space.expand()
 layers = RESNET50_TABLE1[:3]
 
 print(f"design space: {grid.n_points} points "
-      f"(rows {space.rows} x cols {space.cols} x BI {space.bus_invert})")
+      f"(rows {space.rows} x cols {space.cols} x {space.dataflows} "
+      f"x BI {space.bus_invert})")
 a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
 print(f"measured {len(layers)} layers via {stats.jobs} profiling jobs "
       f"({stats.passes} device passes, {stats.cache_hits} cache hits)")
@@ -37,9 +44,13 @@ ev = evaluate_design_space(grid, a_h, a_v)
 mask = ev.pareto(("bus_energy_per_mac_j", "neg_macs_per_cycle", "max_regret"))
 idx = np.flatnonzero(mask)
 idx = idx[np.argsort(-ev.neg_macs_per_cycle[idx])]
+os_mask = np.asarray(grid.dataflow_os, bool)
 
+n_ws = int((mask & ~os_mask).sum())
+n_os = int((mask & os_mask).sum())
 print(f"\nPareto frontier, energy/MAC vs throughput vs regret "
-      f"({len(idx)} of {grid.n_points} points):")
+      f"({len(idx)} of {grid.n_points} points — winner split: "
+      f"{n_ws} WS / {n_os} OS):")
 print(f"{'config':>22} {'W/H*':>6} {'fJ/MAC':>8} {'MACs/cyc':>9} {'regret':>8}")
 for i in idx:
     print(
@@ -49,10 +60,38 @@ for i in idx:
         f"{float(ev.max_regret[i])*100:7.2f}%"
     )
 
-i32 = int(np.flatnonzero((grid.rows == 32) & (grid.cols == 32) & ~grid.bus_invert)[0])
+i32 = int(np.flatnonzero(
+    (grid.rows == 32) & (grid.cols == 32) & ~grid.bus_invert & ~os_mask
+)[0])
 print(
     f"\npaper operating point {grid.describe(i32)}: "
     f"robust W/H*={float(ev.aspect_robust[i32]):.2f}, "
     f"interconnect saving {float(ev.interconnect_saving[i32])*100:.1f}%, "
     f"total {float(ev.total_saving[i32])*100:.1f}% vs square"
 )
+
+# --- what measuring OS actually changed ------------------------------------
+# Re-evaluate under the retired approximation (OS a_v copied from a_h) and
+# rank every point by robust bus power in both worlds.
+a_v_approx = np.where(os_mask[None, :], a_h, a_v)
+ev_apx = evaluate_design_space(grid, a_h, a_v_approx)
+delta = np.abs(a_v - a_v_approx)[:, os_mask]
+rank = np.argsort(np.argsort(ev.bus_power_robust))
+rank_apx = np.argsort(np.argsort(ev_apx.bus_power_robust))
+moved = np.flatnonzero(rank != rank_apx)
+print(f"\nretired a_v := a_h approximation on {int(os_mask.sum())} OS points: "
+      f"mean |delta a_v| = {float(delta.mean()):.4f}, "
+      f"max = {float(delta.max()):.4f}")
+print(f"{len(moved)} of {grid.n_points} points change bus-power rank once OS "
+      f"activities are measured; top design points by |rank move| + robust-"
+      f"aspect shift:")
+shift = np.abs(np.log(ev.aspect_robust) - np.log(ev_apx.aspect_robust))
+score = np.abs(rank - rank_apx) + shift
+top = np.argsort(-score)[:5]
+print(f"{'config':>22} {'rank(apx)':>10} {'rank(meas)':>11} "
+      f"{'W/H*(apx)':>10} {'W/H*(meas)':>11}")
+for i in top:
+    print(
+        f"{grid.describe(int(i)):>22} {int(rank_apx[i]):10d} {int(rank[i]):11d} "
+        f"{float(ev_apx.aspect_robust[i]):10.2f} {float(ev.aspect_robust[i]):11.2f}"
+    )

@@ -10,7 +10,7 @@ from repro.core import (
     SystolicArrayGeometry,
     compare_sym_asym,
     optimal_aspect_power,
-    profile_ws_gemm,
+    profile_gemm,
 )
 
 # 1. the paper's array: 32x32 PEs, int16 operands, 37-bit partial sums
@@ -24,7 +24,7 @@ from repro.core.workloads import synth_activations, synth_weights
 
 acts = quantize_symmetric(synth_activations(512, 256, density=0.5), 16).values
 weights = quantize_symmetric(synth_weights(256, 64), 16).values
-profile = profile_ws_gemm(acts, weights, rows=32, cols=32, b_h=16, b_v=37)
+profile = profile_gemm(acts, weights, rows=32, cols=32, b_h=16, b_v=37)
 print(f"measured activity: a_h={profile.a_h:.3f}  a_v={profile.a_v:.3f}")
 
 # 3. the optimal PE aspect ratio (paper Eq. 6) and what it saves

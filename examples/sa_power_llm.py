@@ -18,7 +18,7 @@ from repro.core.floorplan import (
     accumulator_width,
     optimal_aspect_power,
 )
-from repro.core.switching import combine_profiles, profile_ws_gemms
+from repro.core.switching import combine_profiles, profile_gemms
 from repro.core.workloads import gemm_job, gemms_for_arch
 
 ROWS = COLS = 128
@@ -38,7 +38,7 @@ for seed_base, arch in enumerate(ARCH_IDS):
         gemm_job(g, rows=ROWS, cols=COLS, bits=BITS, seed=100 * seed_base + i)
         for i, g in enumerate(gemms[:5])
     ]
-    profiles = profile_ws_gemms(jobs)
+    profiles = profile_gemms(jobs)
     avg = combine_profiles(profiles)
     act = BusActivity(a_h=min(avg.a_h, 1.0), a_v=min(avg.a_v, 1.0))
     c = compare_sym_asym(geom, act)

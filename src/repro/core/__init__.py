@@ -29,7 +29,17 @@ from repro.core.switching import (  # noqa: F401
     clear_profile_cache,
     combine_profiles,
     profile_cache_info,
+    profile_gemm,
+    profile_gemms,
+    profile_tile,
     profile_ws_gemm,
     stream_toggle_rate,
 )
-from repro.core.systolic import schedule_gemm, ws_matmul_reference  # noqa: F401
+from repro.core.systolic import (  # noqa: F401
+    DATAFLOWS,
+    Dataflow,
+    matmul_reference,
+    os_matmul_reference,
+    schedule_gemm,
+    ws_matmul_reference,
+)

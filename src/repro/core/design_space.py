@@ -31,11 +31,14 @@ aspect-sweep surface is (P, S).  Activities may be passed as scalars, (P,)
 or (W, P) — they are broadcast to (W, P).
 
 Measured activities come from ``repro.core.workloads.measured_design_activities``,
-which profiles one (rows, b_h, b_v) *activity class* per workload layer
-through ``repro.core.pipeline.run_profile_batch`` and broadcasts the result
-across the cols/area/coding axes (toggle activities are column-count
-invariant under the WS stream model), so a handful of profiling passes feeds
-arbitrarily many geometry points.
+which profiles one *activity class* per workload layer through
+``repro.core.pipeline.run_profile_batch`` — (rows, b_h, b_v) classes for WS
+points, geometry-free (b_h, b_v) classes for OS points — and broadcasts the
+result across the cols/area/coding axes (toggle activities are column-count
+invariant under the WS stream model and fully geometry-invariant under OS),
+so a handful of profiling passes feeds arbitrarily many geometry points.
+OS vertical activities are MEASURED from the W-operand column streams; the
+old ``a_v := a_h`` approximation is retired.
 
 Jit boundaries: ``evaluate_design_space`` and ``sweep_bus_power`` each
 compile to a single program (cached per golden-section iteration count);

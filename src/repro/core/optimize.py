@@ -9,9 +9,13 @@
 
 2. Output-stationary (OS) dataflow analysis. Under OS the partial sums never
    move — both streamed operands are input-width. The wirelength asymmetry
-   (B_v > B_h) vanishes, and with operand streams of similar activity the
-   optimal PE is (near-)square: the paper's asymmetry is a *property of the
-   weight-stationary dataflow*, not of systolic arrays per se.
+   (B_v > B_h) vanishes, and the remaining aspect lever is the measured
+   activity ratio of the two operand streams: ``profile_gemm(...,
+   dataflow="OS")`` measures a_h from the A rows and a_v from the W columns
+   (both along the K axis), so the WS-vs-OS comparison in
+   ``repro.core.design_space`` runs on measured numbers for both dataflows.
+   The paper's asymmetry is a *property of the weight-stationary dataflow*,
+   not of systolic arrays per se.
 
 3. Bus-invert coding (paper's ref [19]) as an activity transformer: with an
    extra invert line, a b-bit bus toggles min(d, b+1-d) bits for Hamming
@@ -194,11 +198,14 @@ def os_dataflow_geometry(
 ) -> SystolicArrayGeometry:
     """Bus geometry of an OUTPUT-stationary array of the same size.
 
-    Under OS, A streams West->East and B streams North->South, both at the
+    Under OS, A streams West->East and W streams North->South, both at the
     input width; the (wide) accumulators never cross PE boundaries (results
     drain once at the end, amortized over the whole K-reduction, which the
     steady-state bus model neglects exactly as the paper neglects weight
-    preloading for WS). Hence B_h == B_v == input_bits.
+    preloading for WS). Hence B_h == B_v == input_bits.  Pair with
+    activities measured by ``repro.core.switching.profile_gemm(...,
+    dataflow="OS")`` — a_v is the W-column stream activity, not a copy of
+    a_h (that approximation is retired).
     """
     return SystolicArrayGeometry(
         rows=rows, cols=cols, b_h=input_bits, b_v=input_bits, pe_area_um2=pe_area_um2

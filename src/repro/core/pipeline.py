@@ -1,6 +1,6 @@
 """Batched network-level profiling pipeline: jobs in, a few device programs out.
 
-The per-GEMM entry point (``profile_ws_gemm``) is fast *per call* but every
+The per-GEMM entry point (``profile_gemm``) is fast *per call* but every
 network-scale consumer used to drive it one GEMM at a time — paying a
 host-side operand synthesis, a fresh pad, a host→device copy, a
 shape-specialized recompile (~2s on CPU, twice per distinct shape) and a
@@ -25,7 +25,17 @@ jobs into a handful of fused device programs:
      and quantizes bucket i+1's operands; results are pulled only in the
      final collection phase.
 
-Counts are bit-exact vs per-job ``profile_ws_gemm`` (and the numpy oracle);
+Dataflow is a first-class job axis: ``ProfileJob.dataflow`` selects the
+stream model.  WS jobs run the partial-sum task machinery above; OS jobs
+need none of it — both OS buses carry raw operand streams over the K axis,
+so each OS job schedules two GEOMETRY-FREE operand-stream passes (the A
+rows as (K, M) lane streams at width b_h, the W columns as (K, N) at b_v)
+into strips-only *stream buckets*, and the totals are scaled by the
+output-tile counts at collection (h by ceil(N/cols), v by ceil(M/rows) —
+matching their transition denominators, so OS activities are geometry-
+invariant and a layer profiled at ANY (rows, cols) shares the same passes).
+
+Counts are bit-exact vs per-job ``profile_gemm`` (and the numpy oracle);
 jobs the fused engine cannot take (operands beyond int16 range, degenerate
 shapes, K/rows beyond the engine bounds, or an explicit numpy backend) fall
 back to the serial path per job and are reported in ``BatchStats``.
@@ -47,7 +57,8 @@ from repro.core.switching import (
     _operand_digest,
     _resolve_backend,
     DEFAULT_BACKEND,
-    profile_ws_gemm,
+    os_stream_counts,
+    profile_gemm,
 )
 
 __all__ = [
@@ -64,7 +75,8 @@ class ProfileJob:
     Operands come either eagerly (``a``/``w``) or lazily (``make`` returning
     ``(a, w)`` plus the declared ``shape=(m, k, n)``) — lazy jobs let the
     pipeline overlap operand synthesis with device work, and let bucket
-    planning see shapes without materializing anything.
+    planning see shapes without materializing anything.  ``dataflow``
+    selects the stream model ("WS" partial sums / "OS" operand streams).
     """
 
     rows: int
@@ -76,6 +88,7 @@ class ProfileJob:
     make: Callable[[], tuple[np.ndarray, np.ndarray]] | None = None
     shape: tuple[int, int, int] | None = None
     name: str = ""
+    dataflow: str = "WS"
 
     def gemm_shape(self) -> tuple[int, int, int]:
         """(M, K, N) without materializing lazy operands."""
@@ -151,6 +164,26 @@ class _Bucket:
     future: object | None = None  # -> (h_parts, v_parts, num_tasks) handles
 
 
+@dataclasses.dataclass
+class _StreamPass:
+    """One scheduled geometry-free operand-stream pass (OS jobs)."""
+
+    bucket: int
+    strip_lo: int
+    strip_hi: int
+    total: int | None = None
+
+
+@dataclasses.dataclass
+class _StreamBucket:
+    """Strips-only shape class for OS operand streams: (bits, t_seg)."""
+
+    bits: int
+    t_seg: int
+    strips: list = dataclasses.field(default_factory=list)
+    future: object | None = None  # -> per-strip totals handle
+
+
 def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
 
@@ -162,6 +195,18 @@ def _next_pow2(x: int) -> int:
 MAX_SEG_T = 128
 
 
+# Lane width of OS operand-stream strips.  Purely a batching shape — OS lane
+# streams are independent, so the chop never has to match the array geometry
+# (zero-padded lanes toggle nothing) and one constant collapses every OS job
+# of a given (bits, t_seg) onto one program shape.
+OS_LANE_CHUNK = 64
+
+
+def _os_t_seg(k: int) -> int:
+    """Stream-bucket segment length for a K-step OS operand stream."""
+    return min(MAX_SEG_T, _next_pow2(max(1, -(-k // 8))) * 8)
+
+
 def _bucket_key(job: ProfileJob) -> tuple:
     """Padded shape class: geometry + bus widths + pow2 segment length.
 
@@ -169,11 +214,14 @@ def _bucket_key(job: ProfileJob) -> tuple:
     budget for huge geometries) capped to the job's own stream length
     rounded up to a power of two — so short-stream jobs don't pad to the
     long-stream class and a whole workload collapses into a couple of
-    program shapes.
+    program shapes.  OS jobs class by bus widths + their K-axis segment
+    length only: their stream passes are geometry-free.
     """
     from repro.kernels.activity_profile.kernel import choose_block_t
 
-    m, _, _ = job.gemm_shape()
+    m, k, _ = job.gemm_shape()
+    if job.dataflow == "OS":
+        return ("OS", job.b_h, job.b_v, _os_t_seg(k))
     t_seg = min(
         MAX_SEG_T,
         choose_block_t(job.rows, job.cols),
@@ -186,11 +234,18 @@ def _fused_eligible(job: ProfileJob, a: np.ndarray, w: np.ndarray) -> bool:
     """Mirror of profile_gemm_toggles' contract checks (raise-free)."""
     from repro.kernels.activity_profile.ops import (
         MAX_FUSED_K,
+        MAX_FUSED_LANES,
         MAX_FUSED_ROWS,
         operands_fit_fused,
     )
 
     m, k, n = job.gemm_shape()
+    if job.dataflow == "OS":
+        if k < 2 or m == 0 or n == 0:
+            return False  # zero transitions: serial path returns zeros instantly
+        if max(m, n) >= MAX_FUSED_LANES:
+            return False
+        return operands_fit_fused(a, w)
     if m < 2 or k == 0 or n == 0:
         return False  # zero transitions: serial path returns zeros instantly
     if k + job.rows >= MAX_FUSED_K or job.rows >= MAX_FUSED_ROWS:
@@ -259,6 +314,43 @@ def _schedule_job(job, a, w, t_trim, bucket_map, buckets, pass_map, stats):
     return pass_key
 
 
+def _schedule_os_job(
+    job, a, w, stream_bucket_map, stream_buckets, stream_pass_map, stats
+):
+    """Attach one OS job to its two operand-stream passes (A rows at b_h,
+    W columns at b_v), creating stream buckets as needed.  Pass keys carry
+    NO geometry — OS per-lane stream totals are (rows, cols)-free; the
+    collection phase scales them by each job's own tile counts.  Returns
+    the (A-pass key, W-pass key) pair."""
+    from repro.kernels.activity_profile.batch import segment_strips
+
+    m, k, n = job.gemm_shape()
+    keys = []
+    for tag, arr, shape, bits in (
+        ("A", a, (m, k), job.b_h),
+        ("W", w, (k, n), job.b_v),
+    ):
+        key = ("os", tag, _operand_digest(arr), shape, bits)
+        keys.append(key)
+        if key in stream_pass_map:
+            stats.pass_reuse += 1
+            continue
+        # Stream matrices are time(K)-major: A rows transpose, W is already.
+        stream = np.ascontiguousarray(arr.T) if tag == "A" else arr
+        t_seg = _os_t_seg(k)
+        bkey = (bits, t_seg)
+        if bkey not in stream_bucket_map:
+            stream_bucket_map[bkey] = len(stream_buckets)
+            stream_buckets.append(_StreamBucket(bits, t_seg))
+        bidx = stream_bucket_map[bkey]
+        bucket = stream_buckets[bidx]
+        strip_lo = len(bucket.strips)
+        bucket.strips.extend(segment_strips(stream, OS_LANE_CHUNK, bucket.t_seg))
+        stream_pass_map[key] = _StreamPass(bidx, strip_lo, len(bucket.strips))
+        stats.passes += 1
+    return tuple(keys)
+
+
 def run_profile_batch(
     jobs: Sequence[ProfileJob],
     *,
@@ -269,7 +361,7 @@ def run_profile_batch(
 ) -> tuple[list[ActivityProfile], BatchStats]:
     """Profile every job; returns (profiles in input order, scheduler stats).
 
-    ``backend`` follows ``profile_ws_gemm``: ``"numpy"`` runs the serial
+    ``backend`` follows ``profile_gemm``: ``"numpy"`` runs the serial
     oracle per job (no device work at all); ``"pallas"``/``"auto"`` run the
     batched fused pipeline with per-job fallback to serial for operands the
     engine cannot take. ``engine``/``interpret`` pick the device rendering
@@ -278,6 +370,8 @@ def run_profile_batch(
     from repro.kernels.activity_profile.batch import (
         bucket_toggle_parts,
         reduce_bucket_parts,
+        reduce_stream_parts,
+        stream_bucket_parts,
     )
     from repro.kernels.activity_profile.ops import ToggleCounts
 
@@ -293,18 +387,22 @@ def run_profile_batch(
         for job in jobs:
             a, w = job.operands()
             profiles.append(
-                profile_ws_gemm(
+                profile_gemm(
                     a, w, job.rows, job.cols, job.b_h, job.b_v,
-                    backend="numpy", use_cache=use_cache,
+                    dataflow=job.dataflow, backend="numpy", use_cache=use_cache,
                 )
             )
         return profiles, stats
 
-    # resolution[i]: ("cache", profile) | ("pass", key) | ("serial", backend)
+    # resolution[i]: ("cache", profile) | ("pass", key) | ("os_pass", keys)
+    #             | ("serial", backend)
     resolution: list[tuple] = [None] * len(jobs)
     bucket_map: dict[tuple, int] = {}
     buckets: list[_Bucket] = []
     pass_map: dict[tuple, _Pass] = {}
+    stream_bucket_map: dict[tuple, int] = {}
+    stream_buckets: list[_StreamBucket] = []
+    stream_pass_map: dict[tuple, _StreamPass] = {}
 
     # Group by shape class first (shapes are declared, operands still lazy),
     # then materialize + dispatch bucket by bucket: while bucket i compiles
@@ -400,10 +498,11 @@ def run_profile_batch(
                 job = jobs[i]
                 a, w = prefetched.pop(i).result()
                 _advance_prefetch()
-                resolved = _resolve_backend(backend, a, w, job.rows)
+                resolved = _resolve_backend(backend, a, w, job.rows, job.dataflow)
                 if use_cache:
                     key = _cache_key(
-                        a, w, job.rows, job.cols, job.b_h, job.b_v, (resolved, "exact")
+                        a, w, job.rows, job.cols, job.b_h, job.b_v,
+                        (resolved, job.dataflow, "exact"),
                     )
                     hit = _cache_get(key)
                     if hit is not None:
@@ -412,21 +511,30 @@ def run_profile_batch(
                         continue
                 if resolved == "numpy" or not _fused_eligible(job, a, w):
                     if requested == "pallas" and resolved != "numpy":
-                        # match profile_ws_gemm(backend="pallas"): loud
+                        # match profile_gemm(backend="pallas"): loud
                         # contract failure instead of a silent oracle detour
                         from repro.kernels.activity_profile.ops import (
                             profile_gemm_toggles,
                         )
 
                         profile_gemm_toggles(
-                            a, w, job.rows, job.cols, job.b_h, job.b_v
+                            a, w, job.rows, job.cols, job.b_h, job.b_v,
+                            dataflow=job.dataflow,
                         )
                     resolution[i] = ("serial", resolved)
                     stats.serial_fallbacks += 1
                     continue
-                key = _schedule_job(
-                    job, a, w, t_trim, bucket_map, buckets, pass_map, stats
-                )
+                if job.dataflow == "OS":
+                    keys = _schedule_os_job(
+                        job, a, w, stream_bucket_map, stream_buckets,
+                        stream_pass_map, stats,
+                    )
+                    kind = "os_pass"
+                else:
+                    keys = _schedule_job(
+                        job, a, w, t_trim, bucket_map, buckets, pass_map, stats
+                    )
+                    kind = "pass"
                 # Record the operand statistics (and the content-cache store
                 # key) now and release lazy jobs' operands: the device holds
                 # the (int32) strip copies, so keeping every job's int64
@@ -435,14 +543,14 @@ def run_profile_batch(
                 store_key = (
                     _cache_key(
                         a, w, job.rows, job.cols, job.b_h, job.b_v,
-                        ("pallas", "exact"),
+                        ("pallas", job.dataflow, "exact"),
                     )
                     if use_cache
                     else None
                 )
                 resolution[i] = (
-                    "pass",
-                    (key, float(np.mean(a == 0)), int(a.size), store_key),
+                    kind,
+                    (keys, float(np.mean(a == 0)), int(a.size), store_key),
                 )
                 if job.make is not None:
                     job.a = job.w = None
@@ -453,10 +561,24 @@ def run_profile_batch(
                 b = buckets[bidx]
                 if b.future is None and b.strip_ids:
                     b.future = _submit_bucket(b)
+        # Stream buckets are submitted only after ALL groups are scheduled:
+        # unlike WS buckets (whose bucket key IS the group key), one
+        # (bits, t_seg) stream bucket can collect strips from several
+        # (b_h, b_v) job groups, so an early submit would freeze it before
+        # later groups append.  They are strips-only programs — a trivial
+        # fraction of the device work — so the lost overlap is nil.
+        for b in stream_buckets:
+            if b.future is None and b.strips:
+                b.future = executor.submit(
+                    stream_bucket_parts, np.stack(b.strips),
+                    bits=b.bits, engine=engine, interpret=interpret,
+                )
 
-        stats.buckets = len(buckets)
+        stats.buckets = len(buckets) + len(stream_buckets)
         stats.tasks = sum(len(b.strip_ids) for b in buckets)
-        stats.strips = sum(len(b.strips) for b in buckets)
+        stats.strips = sum(len(b.strips) for b in buckets) + sum(
+            len(b.strips) for b in stream_buckets
+        )
 
         # Collection: block on each bucket once, fold per-pass totals.
         # Sharded buckets: h comes from shard 0 (identical in all shards),
@@ -474,6 +596,10 @@ def run_profile_batch(
                     h_tot = h
                 v_chunks.append(v)
             reduced.append((h_tot, np.concatenate(v_chunks)[: len(b.strip_ids)]))
+        stream_reduced = [
+            reduce_stream_parts(b.future.result()) if b.future is not None else None
+            for b in stream_buckets
+        ]
     finally:
         executor.shutdown(wait=True)
         prefetch_pool.shutdown(wait=True)
@@ -481,6 +607,8 @@ def run_profile_batch(
         h_tot, v_tot = reduced[p.bucket]
         p.h_total = int(h_tot[p.strip_lo : p.strip_hi].sum())
         p.v_total = int(v_tot[p.tile_lo : p.tile_hi].sum())
+    for sp in stream_pass_map.values():
+        sp.total = int(stream_reduced[sp.bucket][sp.strip_lo : sp.strip_hi].sum())
 
     profiles: list[ActivityProfile] = []
     for i, job in enumerate(jobs):
@@ -490,22 +618,41 @@ def run_profile_batch(
             continue
         if kind == "serial":
             profiles.append(
-                profile_ws_gemm(
+                profile_gemm(
                     job.a,
                     job.w,
                     job.rows,
                     job.cols,
                     job.b_h,
                     job.b_v,
+                    dataflow=job.dataflow,
                     backend=payload,
                     use_cache=use_cache,
                 )
             )
             continue
         key, zero_fraction, elements, store_key = payload
-        p = pass_map[key]
         m, k, n = job.gemm_shape()
         n_tiles = -(-n // job.cols)
+        if kind == "os_pass":
+            # Geometry-free stream totals fold through the shared OS
+            # accounting identity with each job's own output tiling.
+            key_a, key_w = key
+            counts = ToggleCounts(
+                *os_stream_counts(
+                    stream_pass_map[key_a].total,
+                    stream_pass_map[key_w].total,
+                    m, k, n, job.rows, job.cols,
+                )
+            )
+            a_h, a_v = counts.activities(job.b_h, job.b_v)
+            profiles.append(
+                _store_profile(
+                    job, counts, a_h, a_v, zero_fraction, elements, store_key
+                )
+            )
+            continue
+        p = pass_map[key]
         counts = ToggleCounts(
             n_tiles * p.h_total,
             p.v_total,
@@ -513,17 +660,26 @@ def run_profile_batch(
             max(m - 1, 0) * k * n,
         )
         a_h, a_v = counts.activities(job.b_h, job.b_v)
-        profile = ActivityProfile(
-            a_h=a_h,
-            a_v=a_v,
-            b_h=job.b_h,
-            b_v=job.b_v,
-            h_transitions=counts.h_transitions,
-            v_transitions=counts.v_transitions,
-            input_zero_fraction=zero_fraction,
-            input_elements=elements,
+        profiles.append(
+            _store_profile(job, counts, a_h, a_v, zero_fraction, elements, store_key)
         )
-        if store_key is not None:
-            _cache_put(store_key, profile)
-        profiles.append(profile)
     return profiles, stats
+
+
+def _store_profile(
+    job: ProfileJob, counts, a_h, a_v, zero_fraction, elements, store_key
+) -> ActivityProfile:
+    """Build one job's profile from folded counts; memoize if keyed."""
+    profile = ActivityProfile(
+        a_h=a_h,
+        a_v=a_v,
+        b_h=job.b_h,
+        b_v=job.b_v,
+        h_transitions=counts.h_transitions,
+        v_transitions=counts.v_transitions,
+        input_zero_fraction=zero_fraction,
+        input_elements=elements,
+    )
+    if store_key is not None:
+        _cache_put(store_key, profile)
+    return profile

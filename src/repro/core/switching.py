@@ -1,24 +1,32 @@
-"""Bit-level switching-activity profiling of weight-stationary SA data streams.
+"""Bit-level switching-activity profiling of systolic-array data streams.
 
-The paper's Eq. 6 needs the *average switching activity per bit* of
+The paper's Eq. 6 needs the *average switching activity per bit* of every
+bus, and what each bus carries is a property of the DATAFLOW
+(``profile_gemm(..., dataflow=...)``):
 
-  * the horizontal input buses (a_h): the sequence of input operands A[t, r]
-    streamed into each row r of the array, and
-  * the vertical partial-sum buses (a_v): the sequence of partial sums
-    S[t, r, c] = sum_{r' <= r} A[t, r'] * W[r', c] flowing South out of each
-    PE (r, c).
+Weight-stationary (``"WS"``, the paper's array):
+  * horizontal buses (a_h): the input operands A[t, r] streamed into each
+    row r of the array over the M axis;
+  * vertical buses (a_v): the partial sums
+    S[t, r, c] = sum_{r' <= r} A[t, r'] * W[r', c] flowing South out of
+    each PE (r, c).
+
+Output-stationary (``"OS"``): the accumulators never move — BOTH buses are
+operand streams over the K (reduction) axis:
+  * horizontal buses (a_h): each array row streams one A row, A[m, t];
+  * vertical buses (a_v): each array column streams one W column, W[t, n].
 
 Toggle statistics between *consecutive values on the same wire* are invariant
 to the systolic pipeline skew (skew delays whole sequences; it does not
 reorder them), so we profile the unskewed streams directly.
 
-Partial sums need up to ``2*B + ceil(log2 R)`` bits (37 for the paper's
+WS partial sums need up to ``2*B + ceil(log2 R)`` bits (37 for the paper's
 config), so this module carries them as int64 and counts toggles on the
 two's-complement representation truncated to the bus width.
 
 Backends
 --------
-``profile_ws_gemm`` dispatches between two implementations of the same
+``profile_gemm`` dispatches between two implementations of the same
 counts (verified bit-exact against each other in tests):
 
   * ``backend="numpy"`` — the host-side oracle below: per-tile Python loop,
@@ -37,8 +45,12 @@ step. Subsampling (``max_tiles``/``max_stream``) is an explicit opt-in and
 both backends draw the identical subsample plan from the seed.
 
 Results are memoized in a content-keyed cache (sha256 over operand bytes +
-geometry), so re-profiling an identical layer is free; see
+geometry + dataflow), so re-profiling an identical layer is free; see
 ``clear_profile_cache`` / ``profile_cache_info``.
+
+``profile_ws_gemm`` / ``profile_ws_gemms`` / ``profile_ws_tile`` survive as
+deprecated aliases of the dataflow-generic API (they forward to
+``dataflow="WS"`` with a DeprecationWarning).
 """
 
 from __future__ import annotations
@@ -58,7 +70,12 @@ __all__ = [
     "stream_toggle_rate",
     "horizontal_stream",
     "vertical_partial_sums",
+    "os_operand_streams",
+    "os_stream_counts",
     "ActivityProfile",
+    "profile_tile",
+    "profile_gemm",
+    "profile_gemms",
     "profile_ws_tile",
     "profile_ws_gemm",
     "profile_ws_gemms",
@@ -150,6 +167,26 @@ def vertical_partial_sums(a_tile: np.ndarray, w_tile: np.ndarray) -> np.ndarray:
     return np.cumsum(products, axis=1)
 
 
+def os_operand_streams(
+    a_tile: np.ndarray, w_tile: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """The per-lane bus streams of one OS output tile.
+
+    ``a_tile`` is (Mt, K) — the A rows resident on the tile's array rows —
+    and ``w_tile`` is (K, Nt).  Under output-stationary dataflow the
+    horizontal bus of array row r carries a_tile[r, t] over the K reduction
+    steps and the vertical bus of array column c carries w_tile[t, c]; no
+    partial sum ever crosses a PE boundary.  Returns ``(h_streams (K, Mt),
+    v_streams (K, Nt))`` with the stream axis leading, ready for
+    ``stream_toggle_rate``.
+    """
+    a = np.asarray(a_tile)
+    w = np.asarray(w_tile)
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} x {w.shape}")
+    return a.T, w
+
+
 @dataclasses.dataclass(frozen=True)
 class ActivityProfile:
     """Measured switching activities + supporting statistics for one workload.
@@ -174,13 +211,30 @@ class ActivityProfile:
         return BusActivity(a_h=self.a_h, a_v=self.a_v)
 
 
-def profile_ws_tile(
+def profile_tile(
     a_tile: np.ndarray,
     w_tile: np.ndarray,
     b_h: int,
     b_v: int,
+    dataflow: str = "WS",
 ) -> tuple[float, float, int, int]:
-    """(a_h, a_v, #h transitions, #v transitions) for one R x C WS tile."""
+    """(a_h, a_v, #h transitions, #v transitions) for one R x C array tile.
+
+    WS: ``a_tile`` is the (T, R) input stream of one weight tile,
+    ``w_tile`` the resident (R, C) weights.  OS: ``a_tile`` is the (Mt, K)
+    A rows of one output tile, ``w_tile`` the (K, Nt) W columns; both buses
+    carry operand streams over K.
+    """
+    if dataflow == "OS":
+        h, v = os_operand_streams(a_tile, w_tile)
+        t = h.shape[0]
+        a_h = stream_toggle_rate(h, b_h, axis=0)
+        a_v = stream_toggle_rate(v, b_v, axis=0)
+        h_trans = max(t - 1, 0) * h.shape[1]
+        v_trans = max(t - 1, 0) * v.shape[1]
+        return a_h, a_v, h_trans, v_trans
+    if dataflow != "WS":
+        raise ValueError(f"unknown dataflow {dataflow!r}")
     h = horizontal_stream(a_tile)
     v = vertical_partial_sums(a_tile, w_tile)
     t = a_tile.shape[0]
@@ -242,7 +296,7 @@ def _fused_importable() -> bool:
 def _warn_numpy_fallback(reason: str) -> None:
     # warnings dedups by (message, location), so this surfaces once per run
     warnings.warn(
-        f"profile_ws_gemm: fused engine unavailable ({reason}); using the "
+        f"profile_gemm: fused engine unavailable ({reason}); using the "
         "slow numpy oracle. Exact full-stream profiling is the default — "
         "pass max_tiles/max_stream to bound large workloads.",
         RuntimeWarning,
@@ -251,7 +305,11 @@ def _warn_numpy_fallback(reason: str) -> None:
 
 
 def _resolve_backend(
-    backend: str | None, a: np.ndarray, w: np.ndarray, rows: int
+    backend: str | None,
+    a: np.ndarray,
+    w: np.ndarray,
+    rows: int,
+    dataflow: str = "WS",
 ) -> str:
     backend = backend if backend is not None else DEFAULT_BACKEND
     if backend == "auto":
@@ -260,11 +318,16 @@ def _resolve_backend(
             return "numpy"
         from repro.kernels.activity_profile.ops import (
             MAX_FUSED_K,
+            MAX_FUSED_LANES,
             MAX_FUSED_ROWS,
             operands_fit_fused,
         )
 
-        if a.shape[1] + rows >= MAX_FUSED_K or rows >= MAX_FUSED_ROWS:
+        if dataflow == "OS":
+            dims_ok = max(a.shape[0], w.shape[1]) < MAX_FUSED_LANES
+        else:
+            dims_ok = a.shape[1] + rows < MAX_FUSED_K and rows < MAX_FUSED_ROWS
+        if not dims_ok:
             _warn_numpy_fallback("GEMM/array dims beyond fused-engine bounds")
             return "numpy"
         if not operands_fit_fused(a, w):
@@ -314,8 +377,12 @@ def _operand_digest(arr: np.ndarray) -> bytes:
 def _cache_key(
     a: np.ndarray, w: np.ndarray, rows, cols, b_h, b_v, mode: tuple
 ) -> bytes:
+    """Content cache key.  ``mode`` is ``(backend, dataflow, *plan)`` — the
+    dataflow MUST be encoded: WS and OS profiles of identical operands and
+    geometry measure different streams and must never alias (the "v3" bump
+    retires any pre-dataflow key shape)."""
     h = hashlib.sha256()
-    h.update(repr(("v2", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
+    h.update(repr(("v3", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
     for arr in (a, w):
         h.update(_operand_digest(arr))
     return h.digest()
@@ -343,7 +410,7 @@ def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
     h_num = v_num = 0.0
     h_den = v_den = 0
     for k0, k1, n0, n1, t0, t1 in plan:
-        ah, av, ht, vt = profile_ws_tile(a[t0:t1, k0:k1], w[k0:k1, n0:n1], b_h, b_v)
+        ah, av, ht, vt = profile_tile(a[t0:t1, k0:k1], w[k0:k1, n0:n1], b_h, b_v)
         h_num += ah * ht
         v_num += av * vt
         h_den += ht
@@ -353,15 +420,57 @@ def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
     return a_h, a_v, h_den, v_den
 
 
+def os_stream_counts(
+    base_h: int, base_v: int, m: int, k: int, n: int, rows: int, cols: int
+) -> tuple[int, int, int, int]:
+    """Fold per-lane OS stream totals into full-GEMM (h_tog, v_tog, h_trans,
+    v_trans).
+
+    Each output tile streams its A rows and W columns over the K axis, so
+    the full-GEMM totals are the per-lane totals scaled by the orthogonal
+    tile count (every nt repeats the A streams of its mt, and vice versa) —
+    the scaling matches the transition denominators, so OS activities are
+    geometry-invariant.  This is THE OS accounting identity; the numpy
+    oracle, the fused engine, and the batch pipeline all fold through it
+    (only ``ref.py`` recounts tile by tile, on purpose).
+    """
+    m_tiles = -(-m // rows) if m else 0
+    n_tiles = -(-n // cols) if n else 0
+    return (
+        n_tiles * base_h,
+        m_tiles * base_v,
+        max(k - 1, 0) * m * n_tiles,
+        max(k - 1, 0) * n * m_tiles,
+    )
+
+
+def _profile_numpy_os(a, w, rows, cols, b_h, b_v) -> tuple[float, float, int, int]:
+    """Host-side OS oracle: per-lane operand-stream toggles, exact."""
+    m, k = a.shape
+    n = w.shape[1]
+    if k < 2 or m == 0 or n == 0:
+        _, _, h_trans, v_trans = os_stream_counts(0, 0, m, k, n, rows, cols)
+        return 0.0, 0.0, h_trans, v_trans
+    h_streams, v_streams = os_operand_streams(a, w)
+    base_h = int(toggles_between(h_streams[:-1], h_streams[1:], b_h).sum())
+    base_v = int(toggles_between(v_streams[:-1], v_streams[1:], b_v).sum())
+    h_tog, v_tog, h_trans, v_trans = os_stream_counts(
+        base_h, base_v, m, k, n, rows, cols
+    )
+    a_h = h_tog / (h_trans * b_h) if h_trans else 0.0
+    a_v = v_tog / (v_trans * b_v) if v_trans else 0.0
+    return a_h, a_v, h_trans, v_trans
+
+
 def _profile_fused(
-    a, w, rows, cols, b_h, b_v, plan, exact: bool
+    a, w, rows, cols, b_h, b_v, plan, exact: bool, dataflow: str = "WS"
 ) -> tuple[float, float, int, int]:
     """The fused engine: exact whole-GEMM grid, or per-plan-entry for opt-in
     subsampling (each entry is a single-tile GEMM for the engine)."""
     from repro.kernels.activity_profile.ops import ToggleCounts, profile_gemm_toggles
 
     if exact:
-        counts = profile_gemm_toggles(a, w, rows, cols, b_h, b_v)
+        counts = profile_gemm_toggles(a, w, rows, cols, b_h, b_v, dataflow=dataflow)
     else:
         counts = ToggleCounts(0, 0, 0, 0)
         for k0, k1, n0, n1, t0, t1 in plan:
@@ -372,7 +481,7 @@ def _profile_fused(
     return a_h, a_v, counts.h_transitions, counts.v_transitions
 
 
-def profile_ws_gemm(
+def profile_gemm(
     a: np.ndarray,
     w: np.ndarray,
     rows: int,
@@ -383,23 +492,34 @@ def profile_ws_gemm(
     max_stream: int | None = None,
     seed: int = 0,
     *,
+    dataflow: str = "WS",
     backend: str | None = None,
     use_cache: bool = True,
 ) -> ActivityProfile:
-    """Profile the full GEMM ``a @ w`` tiled onto an R x C WS systolic array.
+    """Profile the full GEMM ``a @ w`` tiled onto an R x C systolic array.
 
-    The GEMM (M, K) x (K, N) is tiled into ceil(K/rows) * ceil(N/cols) weight
-    tiles; each tile streams all M input rows. By default the profile is
-    EXACT — every tile, every stream step (the fused engine makes this cheap;
-    see the module docstring). Pass ``max_tiles``/``max_stream`` to opt into
-    the legacy subsampled estimate (consecutive stream windows — toggle
-    statistics need adjacency); both backends then draw the identical
-    subsample from ``seed``.
+    Under ``dataflow="WS"`` the GEMM (M, K) x (K, N) is tiled into
+    ceil(K/rows) * ceil(N/cols) weight tiles, each streaming all M input
+    rows; under ``dataflow="OS"`` it is tiled into ceil(M/rows) *
+    ceil(N/cols) output tiles, each streaming both operands over the K
+    reduction axis (see the module docstring for what each bus carries).
+
+    By default the profile is EXACT — every tile, every stream step (the
+    fused engine makes this cheap). Pass ``max_tiles``/``max_stream`` to opt
+    into the legacy WS subsampled estimate (consecutive stream windows —
+    toggle statistics need adjacency); both backends then draw the identical
+    subsample from ``seed``.  OS profiling is exact-only: its work is
+    O(M*K + K*N) with no partial-sum tensor anywhere, so there is nothing
+    worth subsampling (passing the limits with OS raises).
     """
     a = np.asarray(a, dtype=np.int64)
     w = np.asarray(w, dtype=np.int64)
     if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
         raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
+    if dataflow not in ("WS", "OS"):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    if dataflow == "OS" and (max_tiles is not None or max_stream is not None):
+        raise ValueError("OS profiling is exact-only; max_tiles/max_stream apply to WS")
     m, k = a.shape
     _, n = w.shape
 
@@ -415,22 +535,32 @@ def profile_ws_gemm(
     # backends agree to float rounding, but an explicit backend= request
     # (oracle cross-checks, timing) must never be served the other
     # backend's result.
-    resolved = _resolve_backend(backend, a, w, rows)
+    resolved = _resolve_backend(backend, a, w, rows, dataflow)
 
     key = None
     if use_cache:
-        key = _cache_key(a, w, rows, cols, b_h, b_v, (resolved, *mode))
+        key = _cache_key(a, w, rows, cols, b_h, b_v, (resolved, dataflow, *mode))
         hit = _cache_get(key)
         if hit is not None:
             return hit
 
-    plan = None
-    if not exact or resolved == "numpy":
-        plan = _tile_plan(m, k, n, rows, cols, max_tiles, max_stream, seed)
-    if resolved == "pallas":
-        a_h, a_v, h_den, v_den = _profile_fused(a, w, rows, cols, b_h, b_v, plan, exact)
+    if dataflow == "OS":
+        if resolved == "pallas":
+            a_h, a_v, h_den, v_den = _profile_fused(
+                a, w, rows, cols, b_h, b_v, None, True, dataflow="OS"
+            )
+        else:
+            a_h, a_v, h_den, v_den = _profile_numpy_os(a, w, rows, cols, b_h, b_v)
     else:
-        a_h, a_v, h_den, v_den = _profile_numpy(a, w, b_h, b_v, plan)
+        plan = None
+        if not exact or resolved == "numpy":
+            plan = _tile_plan(m, k, n, rows, cols, max_tiles, max_stream, seed)
+        if resolved == "pallas":
+            a_h, a_v, h_den, v_den = _profile_fused(
+                a, w, rows, cols, b_h, b_v, plan, exact
+            )
+        else:
+            a_h, a_v, h_den, v_den = _profile_numpy(a, w, b_h, b_v, plan)
 
     profile = ActivityProfile(
         a_h=a_h,
@@ -447,22 +577,54 @@ def profile_ws_gemm(
     return profile
 
 
-def profile_ws_gemms(jobs, **kwargs):
+def profile_gemms(jobs, **kwargs):
     """Batch API: profile MANY GEMMs as a handful of device programs.
 
-    ``jobs`` is a sequence of ``repro.core.pipeline.ProfileJob``; returns the
-    profiles in input order. Jobs are deduped against the content-keyed
-    cache, bucketed into shared padded shape classes to bound recompiles,
-    dispatched asynchronously (device work overlaps the next bucket's
-    host-side operand synthesis), and identical operands profiled across
-    several (rows, cols) geometries share one device pass. Counts are
-    bit-exact vs per-job ``profile_ws_gemm``. See ``repro.core.pipeline``
-    (``run_profile_batch`` returns scheduling statistics as well).
+    ``jobs`` is a sequence of ``repro.core.pipeline.ProfileJob`` (each
+    carrying its own dataflow); returns the profiles in input order. Jobs
+    are deduped against the content-keyed cache, bucketed into shared padded
+    shape classes to bound recompiles, dispatched asynchronously (device
+    work overlaps the next bucket's host-side operand synthesis), and
+    identical operands profiled across several (rows, cols) geometries share
+    one device pass (OS jobs share geometry-FREE operand-stream passes).
+    Counts are bit-exact vs per-job ``profile_gemm``. See
+    ``repro.core.pipeline`` (``run_profile_batch`` returns scheduling
+    statistics as well).
     """
     from repro.core.pipeline import run_profile_batch
 
     profiles, _ = run_profile_batch(jobs, **kwargs)
     return profiles
+
+
+def _deprecated_ws_alias(name: str, generic: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use repro.core.switching.{generic} "
+        f"(dataflow-generic, defaults to dataflow='WS')",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def profile_ws_gemm(*args, **kwargs) -> ActivityProfile:
+    """Deprecated alias of ``profile_gemm`` (weight-stationary)."""
+    _deprecated_ws_alias("profile_ws_gemm", "profile_gemm")
+    kwargs.setdefault("dataflow", "WS")
+    return profile_gemm(*args, **kwargs)
+
+
+def profile_ws_gemms(jobs, **kwargs):
+    """Deprecated alias of ``profile_gemms`` (jobs default to WS)."""
+    _deprecated_ws_alias("profile_ws_gemms", "profile_gemms")
+    return profile_gemms(jobs, **kwargs)
+
+
+def profile_ws_tile(
+    a_tile: np.ndarray, w_tile: np.ndarray, b_h: int, b_v: int
+) -> tuple[float, float, int, int]:
+    """Deprecated alias of ``profile_tile`` (weight-stationary)."""
+    _deprecated_ws_alias("profile_ws_tile", "profile_tile")
+    return profile_tile(a_tile, w_tile, b_h, b_v, dataflow="WS")
 
 
 def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:

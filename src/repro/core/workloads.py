@@ -18,7 +18,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.quant import quantize_symmetric
-from repro.core.switching import ActivityProfile, profile_ws_gemm
+from repro.core.switching import ActivityProfile, profile_gemm
 
 __all__ = [
     "ConvLayer",
@@ -106,6 +106,14 @@ def synth_weights(k: int, n: int, seed: int = 1, scale: float = 1.0) -> np.ndarr
     return rng.normal(0.0, scale, size=(k, n))
 
 
+def _default_b_v(bits: int, rows: int, dataflow: str) -> int:
+    """Vertical bus data width per dataflow: the WS accumulator width, or the
+    operand width under OS (the W stream; partial sums never move)."""
+    from repro.core.floorplan import accumulator_width
+
+    return bits if dataflow == "OS" else accumulator_width(bits, rows)
+
+
 def profile_conv_layer(
     layer: ConvLayer,
     rows: int = 32,
@@ -117,24 +125,24 @@ def profile_conv_layer(
     seed: int = 0,
     backend: str | None = None,
     use_cache: bool = True,
+    dataflow: str = "WS",
 ) -> ActivityProfile:
     """Quantize a synthetic instance of ``layer`` to int-``bits`` and profile it
-    on an R x C WS array (the paper's Section IV methodology, with synthetic
-    ImageNet-statistics inputs).
+    on an R x C array (the paper's Section IV methodology, with synthetic
+    ImageNet-statistics inputs) under the given dataflow.
 
     Exact full-stream profile by default (fused engine); pass
-    ``max_tiles``/``max_stream`` to opt into the subsampled estimate.
-    Repeat calls hit the content-keyed profile cache.
+    ``max_tiles``/``max_stream`` to opt into the subsampled estimate (WS
+    only — OS profiling is exact by construction).  Repeat calls hit the
+    content-keyed profile cache.
     """
-    from repro.core.floorplan import accumulator_width
-
     g = conv_to_gemm(layer)
     a_f = synth_activations(g.m, g.k, layer.input_density, seed=seed)
     w_f = synth_weights(g.k, g.n, seed=seed + 1)
     a_q = quantize_symmetric(a_f, bits).values
     w_q = quantize_symmetric(w_f, bits).values
-    bv = b_v if b_v is not None else accumulator_width(bits, rows)
-    return profile_ws_gemm(
+    bv = b_v if b_v is not None else _default_b_v(bits, rows, dataflow)
+    return profile_gemm(
         a_q,
         w_q,
         rows=rows,
@@ -144,6 +152,7 @@ def profile_conv_layer(
         max_tiles=max_tiles,
         max_stream=max_stream,
         seed=seed,
+        dataflow=dataflow,
         backend=backend,
         use_cache=use_cache,
     )
@@ -156,6 +165,7 @@ def conv_layer_job(
     bits: int = 16,
     b_v: int | None = None,
     seed: int = 0,
+    dataflow: str = "WS",
 ):
     """A lazy batch-pipeline job for one Table-I conv layer.
 
@@ -165,11 +175,10 @@ def conv_layer_job(
     match ``profile_conv_layer`` exactly, so profiles land on (and hit) the
     same content-keyed cache entries.
     """
-    from repro.core.floorplan import accumulator_width
     from repro.core.pipeline import ProfileJob
 
     g = conv_to_gemm(layer)
-    bv = b_v if b_v is not None else accumulator_width(bits, rows)
+    bv = b_v if b_v is not None else _default_b_v(bits, rows, dataflow)
 
     def make():
         a_f = synth_activations(g.m, g.k, layer.input_density, seed=seed)
@@ -184,6 +193,7 @@ def conv_layer_job(
         make=make,
         shape=(g.m, g.k, g.n),
         name=layer.name,
+        dataflow=dataflow,
     )
 
 
@@ -196,6 +206,7 @@ def gemm_job(
     seed: int = 0,
     density: float | None = None,
     clip: tuple[int, int, int] | None = (128, 512, 256),
+    dataflow: str = "WS",
 ):
     """A lazy job for one (LLM-style) GEMM with synthetic int operands.
 
@@ -204,13 +215,12 @@ def gemm_job(
     ``examples/sa_power_llm.py``. ``clip`` bounds the profiled slice of
     very large GEMMs (toggle *rates* converge long before full LLM dims).
     """
-    from repro.core.floorplan import accumulator_width
     from repro.core.pipeline import ProfileJob
 
     m, k, n = gemm.m, gemm.k, gemm.n
     if clip is not None:
         m, k, n = min(m, clip[0]), min(k, clip[1]), min(n, clip[2])
-    bv = b_v if b_v is not None else accumulator_width(bits, rows)
+    bv = b_v if b_v is not None else _default_b_v(bits, rows, dataflow)
 
     def make():
         rng = np.random.default_rng(seed)
@@ -228,6 +238,7 @@ def gemm_job(
         make=make,
         shape=(m, k, n),
         name=gemm.name,
+        dataflow=dataflow,
     )
 
 
@@ -240,6 +251,7 @@ def profile_network(
     max_tiles: int | None = None,
     max_stream: int | None = None,
     *,
+    dataflow: str = "WS",
     backend: str | None = None,
     use_cache: bool = True,
     return_stats: bool = False,
@@ -251,9 +263,9 @@ def profile_network(
     cache keys, bit-exact profiles — but all layers ride a handful of fused
     device programs with operand synthesis overlapped against device work.
 
-    Subsampling (``max_tiles``/``max_stream``) remains a per-GEMM estimate,
-    so requesting it falls back to the serial loop (the batch pipeline is
-    exact-only). With ``return_stats=True`` also returns the
+    Subsampling (``max_tiles``/``max_stream``, WS only) remains a per-GEMM
+    estimate, so requesting it falls back to the serial loop (the batch
+    pipeline is exact-only). With ``return_stats=True`` also returns the
     ``repro.core.pipeline.BatchStats`` of the run.
     """
     from repro.core.pipeline import BatchStats, run_profile_batch
@@ -272,6 +284,7 @@ def profile_network(
                 seed=i,
                 backend=backend,
                 use_cache=use_cache,
+                dataflow=dataflow,
             )
             for i, layer in enumerate(layers)
         ]
@@ -279,7 +292,9 @@ def profile_network(
         return (profiles, stats) if return_stats else profiles
 
     jobs = [
-        conv_layer_job(layer, rows=rows, cols=cols, bits=bits, b_v=b_v, seed=i)
+        conv_layer_job(
+            layer, rows=rows, cols=cols, bits=bits, b_v=b_v, seed=i, dataflow=dataflow
+        )
         for i, layer in enumerate(layers)
     ]
     profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
@@ -297,29 +312,32 @@ def measured_design_activities(
 ):
     """Measured (W, P) activity arrays for a whole design grid.
 
-    The profile→design-grid adapter: activities under the WS stream model
-    depend only on the *activity class* ``(rows, b_h, b_v_data)`` of a
-    design point, never on its column count, PE area, or coding flag —
+    The profile→design-grid adapter: activities depend only on the *activity
+    class* of a design point, never on its column count, PE area, or coding
+    flag —
 
-      * horizontal: each input lane's stream is a column of ``a`` whatever
-        the tiling; the h toggle total scales with ``ceil(N/cols)`` exactly
-        as its transition denominator does (PR 2's geometry-pass reuse), so
-        ``a_h`` is (rows, cols)-invariant given the quantization width;
-      * vertical: column tiling regroups, never changes, the per-column
-        partial-sum streams, so ``a_v`` depends on ``rows`` (reduction
-        depth) and the bus width only;
+      * WS classes are ``(rows, b_h, b_v_data)``: each input lane's stream
+        is a column of ``a`` whatever the tiling (h totals scale with
+        ``ceil(N/cols)`` exactly as their transition denominators do — PR
+        2's geometry-pass reuse), and column tiling regroups, never changes,
+        the per-column partial-sum streams, so ``a_v`` depends on ``rows``
+        (reduction depth) and the bus width only;
+      * OS classes are ``(b_h, b_v_data)`` — fully geometry-free: both
+        buses carry operand streams over the K axis (A rows horizontally at
+        ``b_h``, W columns vertically at ``b_v``), and both totals scale
+        with their tile counts exactly as the denominators do.  OS vertical
+        activities are MEASURED from the real W-operand column streams —
+        the analytical shortcut ``a_v := a_h`` of earlier revisions is
+        retired (it assigned the A-operand's M-axis activity to a bus that
+        streams the W operand along K; benchmarks/bench_design_space.py
+        quantifies the error and how many design-space winners it flipped);
       * bus-invert is an activity *transform* applied later, inside the
         design-space evaluation, on ``b_v_data`` bits.
 
     So ONE profiling job per activity class per workload layer feeds every
     point of the grid: a few ``run_profile_batch`` passes (content-deduped
-    against the shared sha256 cache) serve thousands-to-millions of design
-    points.  Output-stationary points stream *operands* on both axes; their
-    vertical activity is approximated by the measured horizontal operand
-    activity (``a_v := a_h``, the analytical convention of
-    ``optimize.os_dataflow_geometry``) — and since ``a_h`` is b_v-invariant,
-    OS points attach to any class sharing (rows, b_h) and add no profiling
-    passes of their own unless no WS twin exists.
+    against the shared sha256 cache, OS stream passes shared across ALL
+    geometries) serve thousands-to-millions of design points.
 
     Returns ``(a_h, a_v)`` of shape (len(layers), grid.n_points) — plus the
     ``BatchStats`` with ``return_stats=True``.  Layer i is profiled with
@@ -342,39 +360,31 @@ def measured_design_activities(
         axis=1,
     )
     uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
-    # OS points only consume a_h, which is b_v-invariant — attach them to any
-    # class sharing (rows, b_h) instead of profiling a bits-wide vertical bus
-    # whose results would be discarded.  WS combos first so they define the
-    # classes OS combos piggyback on.
-    classes: list[tuple[int, int, int]] = []
-    class_index: dict[tuple[int, int, int], int] = {}
-    by_rows_bits: dict[tuple[int, int], int] = {}
+    classes: list[tuple] = []
+    class_index: dict[tuple, int] = {}
     uniq_class = np.empty(len(uniq), np.int64)
-    for is_os in (0, 1):
-        for u, (r, b_h, b_v, os_flag) in enumerate(uniq):
-            if os_flag != is_os:
-                continue
-            key = (int(r), int(b_h), int(b_v))
-            idx = class_index.get(key)
-            if idx is None and is_os:
-                idx = by_rows_bits.get((key[0], key[1]))
-            if idx is None:
-                idx = len(classes)
-                classes.append(key)
-                class_index[key] = idx
-                by_rows_bits.setdefault((key[0], key[1]), idx)
-            uniq_class[u] = idx
+    for u, (r, b_h, b_v, os_flag) in enumerate(uniq):
+        # OS activities are geometry-free: rows drops out of the class key.
+        key = ("OS", int(b_h), int(b_v)) if os_flag else ("WS", int(r), int(b_h), int(b_v))
+        idx = class_index.get(key)
+        if idx is None:
+            idx = len(classes)
+            classes.append(key)
+            class_index[key] = idx
+        uniq_class[u] = idx
     cols_fix = int(profile_cols) if profile_cols is not None else int(np.min(grid.cols))
+    rows_fix = int(np.min(grid.rows))  # OS activities are rows-invariant
     jobs = [
         conv_layer_job(
             layer,
-            rows=r,
+            rows=cls[1] if cls[0] == "WS" else rows_fix,
             cols=cols_fix,
-            bits=b_h,
-            b_v=b_v,
+            bits=cls[-2],
+            b_v=cls[-1],
             seed=i,
+            dataflow=cls[0],
         )
-        for (r, b_h, b_v) in classes
+        for cls in classes
         for i, layer in enumerate(layers)
     ]
     profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
@@ -387,7 +397,7 @@ def measured_design_activities(
     )
     point_class = uniq_class[inverse]
     a_h = class_a_h[:, point_class]
-    a_v = np.where(os_mask[None, :], a_h, class_a_v[:, point_class])
+    a_v = class_a_v[:, point_class]
     return (a_h, a_v, stats) if return_stats else (a_h, a_v)
 
 

@@ -46,6 +46,13 @@ Two engines, same counts (verified bit-exact in tests):
 Both return *unconverted* device arrays so callers can overlap bucket i+1's
 host-side operand synthesis with bucket i's device work (async dispatch);
 block with ``reduce_bucket_parts`` when the totals are actually needed.
+
+Output-stationary jobs need none of the partial-sum machinery: both OS
+buses carry raw operand streams over the K axis, so an OS job contributes
+two strips-only passes (the A rows as (K, M) lane streams, the W columns as
+(K, N)) to *stream buckets* dispatched by ``stream_bucket_parts`` — the
+same ``segment_strips`` windows, counted at the bus width, geometry-free
+(the pipeline scales totals by the output-tile counts at collection).
 """
 
 from __future__ import annotations
@@ -59,6 +66,7 @@ import numpy as np
 from repro.kernels.activity_profile.kernel import (
     activity_profile_pallas_tasks,
     bus_masks,
+    stream_strips_toggles_pallas,
     value32_toggles,
 )
 from repro.kernels.bitops import popcount_u32
@@ -69,7 +77,9 @@ __all__ = [
     "popcount_sum",
     "segment_strips",
     "bucket_toggle_parts",
+    "stream_bucket_parts",
     "reduce_bucket_parts",
+    "reduce_stream_parts",
 ]
 
 # Vectorization width of the v pass: tasks per lax.map step, sized so one
@@ -288,6 +298,34 @@ def bucket_toggle_parts(
     return h_parts, v_parts, num_tasks
 
 
+def stream_bucket_parts(
+    strips: np.ndarray,
+    *,
+    bits: int,
+    engine: str = "auto",
+    interpret: bool = False,
+    device=None,
+) -> jnp.ndarray:
+    """Dispatch one OPERAND-STREAM bucket's program; do NOT block.
+
+    OS-dataflow jobs flatten each operand's per-lane streams into the same
+    seeded (t_seg + 1, lane_chunk) windows as WS horizontal streams
+    (``segment_strips`` on the time-major stream matrix) — there is no
+    partial-sum arithmetic at all, so a bucket is ONE strips-only pass:
+    per-strip toggle totals at the bus width ``bits``.  Returns the
+    still-computing (S,) int32 device array (jax async dispatch).
+    """
+    put = (lambda x: jax.device_put(x, device)) if device is not None else jnp.asarray
+    strips = put(strips)
+    if engine == "auto":
+        engine = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if engine == "xla":
+        return _h_strips_xla(strips, b_h=bits)
+    if engine == "pallas":
+        return stream_strips_toggles_pallas(strips, bits=bits, interpret=interpret)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
 def reduce_bucket_parts(
     h_parts, v_parts, num_tasks: int
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -295,3 +333,8 @@ def reduce_bucket_parts(
     h = np.asarray(h_parts).astype(np.int64)
     v = np.asarray(v_parts).astype(np.int64)[:num_tasks]
     return h, v
+
+
+def reduce_stream_parts(parts) -> np.ndarray:
+    """Block on a stream bucket's device array; int64 per-strip totals."""
+    return np.asarray(parts).astype(np.int64)

@@ -31,6 +31,11 @@ under a static (lo_mask, hi_mask) split — exact for bits in [1, 64].
 
 The same jnp helpers below are shared by the jitted XLA fallback in ops.py
 (used when no TPU is attached), so both engines are one algorithm.
+
+Output-stationary profiling needs no partial-sum machinery at all — both OS
+buses carry raw operand streams — so its kernels are the lighter
+``operand_stream_toggles_pallas`` (per-GEMM, time-blocked with a VMEM seed
+carry) and ``stream_strips_toggles_pallas`` (batched seeded windows).
 """
 
 from __future__ import annotations
@@ -60,6 +65,8 @@ __all__ = [
     "value32_toggles",
     "activity_profile_pallas",
     "activity_profile_pallas_tasks",
+    "operand_stream_toggles_pallas",
+    "stream_strips_toggles_pallas",
 ]
 
 
@@ -236,6 +243,86 @@ def activity_profile_pallas(
         ],
         interpret=interpret,
     )(a_pad, w_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t", "interpret"))
+def operand_stream_toggles_pallas(
+    x_pad: jnp.ndarray,
+    *,
+    bits: int,
+    block_t: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Toggle partials for a bundle of independent operand lane streams.
+
+    The OS dataflow streams OPERANDS on both array axes — per-lane value
+    sequences with no cross-lane arithmetic — so its per-GEMM profile needs
+    only this kernel: ``x_pad`` is (T_pad, L) int32, one stream per column,
+    T edge-padded to a ``block_t`` multiple (replicated values toggle zero
+    bits).  One grid cell per time block; the previous block's last row is
+    carried in VMEM scratch so cross-block transitions count exactly once.
+    Returns (num_t_blocks, block_t) int32 partials reduced per TIME ROW,
+    not per block — each bounded by L * 64 regardless of ``block_t``
+    (< 2^31 for any L < 2^25, the ``MAX_FUSED_LANES`` contract), exactly
+    like the XLA h pass; the caller reduces in int64.
+    """
+    t_pad, lanes = x_pad.shape
+    if t_pad % block_t:
+        raise ValueError(f"padded stream length {t_pad} not a multiple of {block_t}")
+    num_tb = t_pad // block_t
+
+    def kernel(x_ref, o_ref, prev_x):
+        j = pl.program_id(0)
+        x = x_ref[...]  # (block_t, lanes)
+
+        @pl.when(j == 0)
+        def _():
+            prev_x[...] = x[:1]
+
+        lag = jnp.concatenate([prev_x[...], x[:-1]], axis=0)
+        o_ref[0, :] = jnp.sum(value32_toggles(x, lag, bits), axis=1)
+        prev_x[...] = x[-1:]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tb,),
+        in_specs=[pl.BlockSpec((block_t, lanes), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((1, block_t), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tb, block_t), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, lanes), jnp.int32)],
+        interpret=interpret,
+    )(x_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def stream_strips_toggles_pallas(
+    strips: jnp.ndarray,
+    *,
+    bits: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-strip toggle totals for STACKED seeded stream windows.
+
+    The batch pipeline flattens OS operand streams (and WS horizontal
+    streams) into independent (t_seg + 1, lanes) windows whose row 0 seeds
+    the cross-window transition (see ``batch.segment_strips``); each grid
+    cell toggles one window.  Returns (S,) int32 totals, each bounded by
+    t_seg * lanes * 64 < 2^31 by the segment budget; callers reduce int64.
+    """
+    num_strips, t_seg1, lanes = strips.shape
+
+    def kernel(s_ref, o_ref):
+        s = s_ref[0]  # (t_seg + 1, lanes)
+        o_ref[0] = jnp.sum(value32_toggles(s[1:], s[:-1], bits))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_strips,),
+        in_specs=[pl.BlockSpec((1, t_seg1, lanes), lambda p: (p, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((num_strips,), jnp.int32),
+        interpret=interpret,
+    )(strips)
 
 
 @functools.partial(

@@ -1,8 +1,18 @@
 """Public API for the fused switching-activity engine.
 
 ``profile_gemm_toggles`` returns EXACT integer toggle totals for the
-horizontal and vertical buses of a full WS GEMM — every weight tile, every
-stream step — without ever materializing the (T, R, C) partial-sum tensor.
+horizontal and vertical buses of a full GEMM under either systolic dataflow:
+
+  * ``dataflow="WS"`` — weight-stationary: horizontal buses stream the A
+    operand over the M axis, vertical buses carry the partial-sum cumsum
+    down the reduction rows.  Every weight tile, every stream step, without
+    ever materializing the (T, R, C) partial-sum tensor.
+  * ``dataflow="OS"`` — output-stationary: BOTH buses are operand streams
+    over the K axis (A rows horizontally, W columns vertically; the
+    accumulators never move).  Per-lane toggle totals are geometry-free and
+    scale with the output-tile counts — ceil(N/cols) horizontally,
+    ceil(M/rows) vertically — exactly as their transition denominators do,
+    so no partial-sum machinery runs at all.
 
 Two engines run the identical algorithm (shared jnp helpers in kernel.py):
 
@@ -32,6 +42,7 @@ import numpy as np
 from repro.kernels.activity_profile.kernel import (
     activity_profile_pallas,
     choose_block_t,
+    operand_stream_toggles_pallas,
     partial_sum_planes,
     planes_toggles,
     value32_toggles,
@@ -41,8 +52,10 @@ __all__ = [
     "ToggleCounts",
     "INT16_SAFE_MAX",
     "MAX_FUSED_K",
+    "MAX_FUSED_LANES",
     "operands_fit_fused",
     "profile_gemm_toggles",
+    "stream_toggle_total",
 ]
 
 INT16_SAFE_MAX = (1 << 15) - 1
@@ -52,6 +65,9 @@ INT16_SAFE_MAX = (1 << 15) - 1
 MAX_FUSED_K = 1 << 25
 # The lo/hi int32 cumsum planes are exact only while R * 0xffff fits int32.
 MAX_FUSED_ROWS = 1 << 15
+# OS streams reduce per-time-row toggle partials over their lane axis (M for
+# the A stream, N for the W stream) in int32: lanes * 64 must stay < 2^31.
+MAX_FUSED_LANES = 1 << 25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,18 +93,17 @@ class ToggleCounts:
         )
 
 
-def operands_fit_fused(a: np.ndarray, w: np.ndarray) -> bool:
-    """True iff products fit int32 (int16-range operands) — the engine's contract.
+def _fits_int16(arr: np.ndarray) -> bool:
+    # Bounds are checked via min/max, NOT np.abs: abs(int64 min) wraps
+    # negative and would silently admit an out-of-contract value.
+    return not arr.size or (
+        -INT16_SAFE_MAX <= int(arr.min()) and int(arr.max()) <= INT16_SAFE_MAX
+    )
 
-    Bounds are checked via min/max, NOT np.abs: abs(int64 min) wraps negative
-    and would silently admit an out-of-contract value.
-    """
-    for arr in (a, w):
-        if arr.size and not (
-            -INT16_SAFE_MAX <= int(arr.min()) and int(arr.max()) <= INT16_SAFE_MAX
-        ):
-            return False
-    return True
+
+def operands_fit_fused(a: np.ndarray, w: np.ndarray) -> bool:
+    """True iff products fit int32 (int16-range operands) — the engine's contract."""
+    return _fits_int16(a) and _fits_int16(w)
 
 
 @functools.partial(jax.jit, static_argnames=("b_h", "block_t"))
@@ -225,6 +240,85 @@ def _pad_operands(
     return a_pad, w_pad
 
 
+def stream_toggle_total(
+    x: np.ndarray,
+    bits: int,
+    *,
+    engine: str = "auto",
+    block_t: int | None = None,
+    interpret: bool = False,
+) -> int:
+    """Exact toggle total of a bundle of independent value streams.
+
+    ``x`` is (T, L): L lanes, each a T-step stream of int16-range values
+    toggling on a ``bits``-wide two's-complement bus.  This is the whole
+    per-operand computation of the OS dataflow (and the h pass of WS, up to
+    tiling).  Runs the operand-stream Pallas kernel on TPU hosts and the
+    shared scan-free XLA h pass elsewhere; both reuse the WS horizontal
+    machinery so the engines stay one algorithm.
+    """
+    x = np.asarray(x)
+    t, lanes = x.shape
+    if t < 2 or lanes == 0:
+        return 0
+    if not _fits_int16(x):
+        # validate-or-raise, like profile_gemm_toggles: a silent int32 cast
+        # would wrap out-of-contract values into wrong totals
+        raise ValueError(
+            "fused engine needs int16-range stream values; "
+            "use the numpy backend for wider values"
+        )
+    if lanes >= MAX_FUSED_LANES:
+        raise ValueError("fused engine supports < 2^25 stream lanes")
+    if block_t is None:
+        block_t = min(choose_block_t(1, lanes), -(-t // 8) * 8)
+    pt = (-t) % block_t
+    # Edge-replicate the stream tail: repeated values toggle zero bits.
+    x_pad = np.pad(x.astype(np.int32), ((0, pt), (0, 0)), mode="edge")
+    if engine == "auto":
+        engine = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if engine == "pallas":
+        parts = operand_stream_toggles_pallas(
+            jnp.asarray(x_pad), bits=bits, block_t=block_t, interpret=interpret
+        )
+    elif engine == "xla":
+        parts = _h_toggles_xla(jnp.asarray(x_pad), b_h=bits, block_t=block_t)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return int(np.asarray(parts).astype(np.int64).sum())
+
+
+def _profile_os_toggles(
+    a: np.ndarray,
+    w: np.ndarray,
+    rows: int,
+    cols: int,
+    b_h: int,
+    b_v: int,
+    engine: str,
+    block_t: int | None,
+    interpret: bool,
+) -> ToggleCounts:
+    """OS totals: per-lane operand-stream toggles scaled by the tile grid.
+
+    Every (mt, nt) output tile streams the SAME A rows (for its mt) and the
+    same W columns (for its nt) over the K axis; the fold into full-GEMM
+    totals is the shared ``switching.os_stream_counts`` identity.  Edge
+    tiles need no masking: summing over the true lanes of ``a``/``w``
+    already covers exactly the valid PEs.
+    """
+    from repro.core.switching import os_stream_counts
+
+    m, k = a.shape
+    n = w.shape[1]
+    if k < 2 or m == 0 or n == 0:
+        return ToggleCounts(*os_stream_counts(0, 0, m, k, n, rows, cols))
+    kw = dict(engine=engine, block_t=block_t, interpret=interpret)
+    base_h = stream_toggle_total(np.ascontiguousarray(a.T), b_h, **kw)
+    base_v = stream_toggle_total(w, b_v, **kw)
+    return ToggleCounts(*os_stream_counts(base_h, base_v, m, k, n, rows, cols))
+
+
 def profile_gemm_toggles(
     a: np.ndarray,
     w: np.ndarray,
@@ -233,16 +327,19 @@ def profile_gemm_toggles(
     b_h: int,
     b_v: int,
     *,
+    dataflow: str = "WS",
     engine: str = "auto",
     block_t: int | None = None,
     interpret: bool = False,
 ) -> ToggleCounts:
-    """Exact toggle totals for GEMM ``a @ w`` tiled on an R x C WS array.
+    """Exact toggle totals for GEMM ``a @ w`` tiled on an R x C array.
 
     ``a`` is (M, K), ``w`` is (K, N), integer-valued with int16-range
     magnitudes. Counts match ``repro.core.switching``'s numpy oracle
-    bit-for-bit: every ceil(K/rows)*ceil(N/cols) weight tile, all M stream
-    steps, bus widths ``b_h``/``b_v`` in [1, 64].
+    bit-for-bit under both dataflows: for WS every ceil(K/rows)*ceil(N/cols)
+    weight tile and all M stream steps; for OS every ceil(M/rows)*ceil(N/cols)
+    output tile and all K reduction steps. Bus widths ``b_h``/``b_v`` in
+    [1, 64].
     """
     a = np.asarray(a)
     w = np.asarray(w)
@@ -250,10 +347,23 @@ def profile_gemm_toggles(
         raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
     if not 1 <= b_h <= 64 or not 1 <= b_v <= 64:
         raise ValueError("bus widths must be in [1, 64]")
+    if dataflow not in ("WS", "OS"):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
     if not operands_fit_fused(a, w):
         raise ValueError(
             "fused engine needs int16-range operands (products must fit int32); "
             "use the numpy backend for wider values"
+        )
+    if dataflow == "OS":
+        if max(a.shape[0], w.shape[1]) >= MAX_FUSED_LANES:
+            # per-time-row stream partials are bounded by lanes * 64
+            raise ValueError(
+                "fused OS engine supports M, N < 2^25; use the numpy backend"
+            )
+        if engine == "auto":
+            engine = "pallas" if jax.default_backend() == "tpu" else "xla"
+        return _profile_os_toggles(
+            a, w, rows, cols, b_h, b_v, engine, block_t, interpret
         )
     if a.shape[1] + rows >= MAX_FUSED_K:
         # per-row int32 h-toggle partials are bounded by K_pad * 64

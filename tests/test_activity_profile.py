@@ -16,7 +16,7 @@ from repro.core.switching import (
     clear_profile_cache,
     combine_profiles,
     profile_cache_info,
-    profile_ws_gemm,
+    profile_gemm,
 )
 from repro.kernels.activity_profile.ops import (
     ToggleCounts,
@@ -112,10 +112,10 @@ def test_toggle_counts_add_and_activities():
 # ---------------------------------------------------------------------------
 
 
-def test_profile_ws_gemm_backends_agree_exact():
+def test_profile_gemm_backends_agree_exact():
     a, w = _rand_gemm(64, 64, 48, lo=-1000, hi=1000)
-    pn = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="numpy", use_cache=False)
-    pp = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="pallas", use_cache=False)
+    pn = profile_gemm(a, w, 32, 32, 16, 37, backend="numpy", use_cache=False)
+    pp = profile_gemm(a, w, 32, 32, 16, 37, backend="pallas", use_cache=False)
     assert pp.a_h == pytest.approx(pn.a_h, abs=1e-12)
     assert pp.a_v == pytest.approx(pn.a_v, abs=1e-12)
     assert (pp.h_transitions, pp.v_transitions) == (pn.h_transitions, pn.v_transitions)
@@ -123,12 +123,12 @@ def test_profile_ws_gemm_backends_agree_exact():
     assert pp.input_elements == a.size
 
 
-def test_profile_ws_gemm_backends_agree_subsampled():
+def test_profile_gemm_backends_agree_subsampled():
     """Opt-in subsampling draws the identical plan on both backends."""
     a, w = _rand_gemm(300, 80, 70, lo=0, hi=500)
     kw = dict(max_tiles=3, max_stream=64, seed=11, use_cache=False)
-    pn = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="numpy", **kw)
-    pp = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="pallas", **kw)
+    pn = profile_gemm(a, w, 32, 32, 16, 37, backend="numpy", **kw)
+    pp = profile_gemm(a, w, 32, 32, 16, 37, backend="pallas", **kw)
     assert pp.a_h == pytest.approx(pn.a_h, abs=1e-12)
     assert pp.a_v == pytest.approx(pn.a_v, abs=1e-12)
     assert (pp.h_transitions, pp.v_transitions) == (pn.h_transitions, pn.v_transitions)
@@ -137,15 +137,15 @@ def test_profile_ws_gemm_backends_agree_subsampled():
 def test_auto_backend_falls_back_for_wide_operands():
     a = RNG.integers(-(2**30), 2**30, size=(16, 8))
     w = RNG.integers(-(2**30), 2**30, size=(8, 4))
-    p = profile_ws_gemm(a, w, 8, 8, 16, 37, use_cache=False)  # must not raise
+    p = profile_gemm(a, w, 8, 8, 16, 37, use_cache=False)  # must not raise
     assert 0.0 <= p.a_v <= 1.0
 
 
 def test_nonbinding_subsample_limits_are_exact():
     """max_tiles/max_stream that don't bind produce the exact profile."""
     a, w = _rand_gemm(50, 40, 20, lo=0, hi=100)
-    exact = profile_ws_gemm(a, w, 32, 32, 16, 37, use_cache=False)
-    loose = profile_ws_gemm(
+    exact = profile_gemm(a, w, 32, 32, 16, 37, use_cache=False)
+    loose = profile_gemm(
         a, w, 32, 32, 16, 37, max_tiles=100, max_stream=1000, use_cache=False
     )
     assert loose == exact
@@ -159,19 +159,19 @@ def test_nonbinding_subsample_limits_are_exact():
 def test_profile_cache_hits_on_identical_content():
     clear_profile_cache()
     a, w = _rand_gemm(32, 16, 8, lo=0, hi=100)
-    p1 = profile_ws_gemm(a, w, 16, 8, 16, 37)
+    p1 = profile_gemm(a, w, 16, 8, 16, 37)
     # same content in a different dtype/array must hit
-    p2 = profile_ws_gemm(a.astype(np.int32), w.copy(), 16, 8, 16, 37)
+    p2 = profile_gemm(a.astype(np.int32), w.copy(), 16, 8, 16, 37)
     info = profile_cache_info()
     assert info["hits"] == 1 and info["misses"] == 1 and info["size"] == 1
     assert p1 is p2
     # exact-mode key ignores the (unused) subsample seed
-    p3 = profile_ws_gemm(a, w, 16, 8, 16, 37, seed=123)
+    p3 = profile_gemm(a, w, 16, 8, 16, 37, seed=123)
     assert p3 is p1
     # different content misses
     a2 = a.copy()
     a2[0, 0] += 1
-    profile_ws_gemm(a2, w, 16, 8, 16, 37)
+    profile_gemm(a2, w, 16, 8, 16, 37)
     assert profile_cache_info()["misses"] == 2
     clear_profile_cache()
     assert profile_cache_info() == {"size": 0, "hits": 0, "misses": 0}
@@ -180,14 +180,14 @@ def test_profile_cache_hits_on_identical_content():
 def test_profile_cache_distinguishes_geometry_and_backend():
     clear_profile_cache()
     a, w = _rand_gemm(32, 16, 8, lo=0, hi=100)
-    profile_ws_gemm(a, w, 16, 8, 16, 37)
-    profile_ws_gemm(a, w, 8, 8, 16, 37)
-    profile_ws_gemm(a, w, 16, 8, 16, 40)
+    profile_gemm(a, w, 16, 8, 16, 37)
+    profile_gemm(a, w, 8, 8, 16, 37)
+    profile_gemm(a, w, 16, 8, 16, 40)
     assert profile_cache_info()["misses"] == 3
     # an explicit backend request must never be served the other backend's
     # cached result (oracle cross-checks would compare an object with itself)
-    pn = profile_ws_gemm(a, w, 16, 8, 16, 37, backend="numpy")
-    pp = profile_ws_gemm(a, w, 16, 8, 16, 37, backend="pallas")
+    pn = profile_gemm(a, w, 16, 8, 16, 37, backend="numpy")
+    pp = profile_gemm(a, w, 16, 8, 16, 37, backend="pallas")
     assert profile_cache_info()["misses"] == 4  # numpy missed; pallas hit entry 1
     assert pn is not pp
     clear_profile_cache()
@@ -211,3 +211,90 @@ def test_combine_zero_fraction_unweighted_fallback():
     p1 = ActivityProfile(0.1, 0.2, 16, 37, 10, 10, 1.0)
     p2 = ActivityProfile(0.1, 0.2, 16, 37, 10, 10, 0.0)
     assert combine_profiles([p1, p2]).input_zero_fraction == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary dataflow: fused engines vs the tile-walking oracle
+# ---------------------------------------------------------------------------
+
+# ragged shapes incl. non-aligned M/K/N, degenerate K, wide buses
+OS_CASES = [
+    # m, k, n, rows, cols, b_h, b_v
+    (7, 5, 3, 32, 32, 16, 16),
+    (64, 64, 48, 32, 32, 16, 16),
+    (100, 37, 29, 16, 8, 8, 8),
+    (33, 70, 10, 32, 32, 16, 64),
+    (1, 2, 1, 8, 8, 16, 37),
+    (17, 16, 16, 16, 16, 32, 32),
+    (257, 40, 33, 16, 16, 37, 33),  # b > 32: sign-extension toggles
+    (12, 1025, 16, 8, 8, 16, 12),  # long K stream: multiple t-blocks
+]
+
+
+@pytest.mark.parametrize("case", OS_CASES)
+def test_os_xla_engine_matches_oracle_bit_exact(case):
+    m, k, n, rows, cols, b_h, b_v = case
+    a, w = _rand_gemm(m, k, n)
+    ref = profile_gemm_toggles_ref(a, w, rows, cols, b_h, b_v, dataflow="OS")
+    got = profile_gemm_toggles(a, w, rows, cols, b_h, b_v, dataflow="OS", engine="xla")
+    assert (got.h_toggles, got.v_toggles, got.h_transitions, got.v_transitions) == ref
+
+
+@pytest.mark.parametrize("case", OS_CASES[:5])
+def test_os_pallas_kernel_matches_oracle_bit_exact(case):
+    m, k, n, rows, cols, b_h, b_v = case
+    a, w = _rand_gemm(m, k, n)
+    ref = profile_gemm_toggles_ref(a, w, rows, cols, b_h, b_v, dataflow="OS")
+    got = profile_gemm_toggles(
+        a, w, rows, cols, b_h, b_v, dataflow="OS", engine="pallas", interpret=True
+    )
+    assert (got.h_toggles, got.v_toggles, got.h_transitions, got.v_transitions) == ref
+
+
+def test_os_pallas_small_block_t_carries_across_blocks():
+    a, w = _rand_gemm(10, 100, 8)  # K = 100 stream, many 8-step blocks
+    ref = profile_gemm_toggles_ref(a, w, 8, 8, 16, 16, dataflow="OS")
+    got = profile_gemm_toggles(
+        a, w, 8, 8, 16, 16, dataflow="OS", engine="pallas", interpret=True, block_t=8
+    )
+    assert (got.h_toggles, got.v_toggles, got.h_transitions, got.v_transitions) == ref
+
+
+def test_os_profile_gemm_backends_agree_exact():
+    a, w = _rand_gemm(33, 70, 10, lo=-1000, hi=1000)
+    pn = profile_gemm(a, w, 16, 8, 16, 16, dataflow="OS", backend="numpy", use_cache=False)
+    pp = profile_gemm(a, w, 16, 8, 16, 16, dataflow="OS", backend="pallas", use_cache=False)
+    assert pp.a_h == pytest.approx(pn.a_h, abs=1e-12)
+    assert pp.a_v == pytest.approx(pn.a_v, abs=1e-12)
+    assert (pp.h_transitions, pp.v_transitions) == (pn.h_transitions, pn.v_transitions)
+
+
+def test_os_auto_backend_falls_back_for_wide_operands():
+    a = RNG.integers(-(2**30), 2**30, size=(16, 8))
+    w = RNG.integers(-(2**30), 2**30, size=(8, 4))
+    with pytest.warns(RuntimeWarning):
+        p = profile_gemm(a, w, 8, 8, 16, 16, dataflow="OS", use_cache=False)
+    assert 0.0 <= p.a_v <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# WS bit-for-bit regression: counts captured BEFORE the dataflow refactor
+# ---------------------------------------------------------------------------
+
+# profile_gemm_toggles(engine="xla") outputs on rng(42) operands, recorded
+# from the pre-refactor engine — the dataflow dispatch must not perturb a
+# single WS toggle.
+WS_GOLDEN = {
+    (64, 64, 48, 32, 32, 16, 37): (64626, 3555919, 8064, 193536),
+    (33, 70, 10, 16, 8, 16, 37): (35552, 413326, 4480, 22400),
+    (100, 37, 29, 16, 8, 8, 20): (58320, 1054295, 14652, 106227),
+}
+
+
+def test_ws_counts_unchanged_by_dataflow_refactor():
+    rng = np.random.default_rng(42)
+    for (m, k, n, rows, cols, b_h, b_v), want in WS_GOLDEN.items():
+        a = rng.integers(-1000, 1000, size=(m, k))
+        w = rng.integers(-1000, 1000, size=(k, n))
+        t = profile_gemm_toggles(a, w, rows, cols, b_h, b_v, engine="xla")
+        assert (t.h_toggles, t.v_toggles, t.h_transitions, t.v_transitions) == want

@@ -291,26 +291,39 @@ def test_measured_activities_map_classes_onto_grid():
             assert np.allclose(a_v[i, sel], p.a_v)
 
 
-def test_measured_activities_os_points_use_operand_activity():
-    from repro.core.workloads import measured_design_activities
+def test_measured_activities_os_points_are_measured():
+    """The retired ``a_v := a_h`` shortcut: OS vertical activities now come
+    from the real W-operand column streams, and OS horizontal activities
+    from the A rows streamed along K (NOT the WS M-axis stream)."""
+    from repro.core.switching import profile_gemm
+    from repro.core.workloads import (
+        conv_layer_job,
+        measured_design_activities,
+        profile_conv_layer,
+    )
 
-    sp = DesignSpace(rows=(4,), cols=(4,), input_bits=(8,), dataflows=("WS", "OS"))
+    sp = DesignSpace(rows=(4, 8), cols=(4,), input_bits=(8,), dataflows=("WS", "OS"))
     grid = sp.expand()
     layers = _tiny_layers()[:1]
     a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
     os_sel = np.asarray(grid.dataflow_os)
-    assert np.array_equal(a_v[:, os_sel], a_h[:, os_sel])
-    assert not np.array_equal(a_v[:, ~os_sel], a_h[:, ~os_sel])
-    # a_h is b_v-invariant, so OS points piggyback on the WS class instead of
-    # paying profiling jobs for a bits-wide vertical bus nobody reads
-    assert stats.jobs == len(layers)
-    # ... unless no WS twin exists: an OS-only space profiles its own class
-    _, _, st_os = measured_design_activities(
-        DesignSpace(rows=(4,), cols=(4,), input_bits=(8,), dataflows=("OS",)).expand(),
-        layers,
-        return_stats=True,
-    )
-    assert st_os.jobs == len(layers)
+    # measured, not copied — and distinct from the WS activities
+    assert not np.array_equal(a_v[:, os_sel], a_h[:, os_sel])
+    assert not np.array_equal(a_h[:, os_sel], a_h[:, ~os_sel])
+    # OS classes are geometry-free: one per (b_h, b_v), rows-invariant
+    assert np.unique(a_v[:, os_sel], axis=1).shape[1] == 1
+    # 2 WS rows-classes + 1 OS class, one job each per layer
+    assert stats.jobs == 3 * len(layers)
+    # ... and they match the serial OS profiler on the same operands/seed
+    p = profile_conv_layer(layers[0], rows=4, cols=4, bits=8, seed=0, dataflow="OS")
+    assert np.allclose(a_h[0, os_sel], p.a_h)
+    assert np.allclose(a_v[0, os_sel], p.a_v)
+    # ... which is itself the exact W-column stream measurement
+    job = conv_layer_job(layers[0], rows=4, cols=4, bits=8, seed=0, dataflow="OS")
+    a, w = job.operands()
+    direct = profile_gemm(a, w, 4, 4, 8, 8, dataflow="OS", backend="numpy",
+                          use_cache=False)
+    assert p.a_v == pytest.approx(direct.a_v, abs=1e-12)
 
 
 def test_measured_end_to_end_evaluation():

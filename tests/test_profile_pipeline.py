@@ -11,8 +11,8 @@ from repro.core.pipeline import BatchStats, ProfileJob, run_profile_batch
 from repro.core.switching import (
     clear_profile_cache,
     profile_cache_info,
-    profile_ws_gemm,
-    profile_ws_gemms,
+    profile_gemm,
+    profile_gemms,
 )
 from repro.core.workloads import ConvLayer, conv_layer_job, profile_network
 from repro.kernels.activity_profile.ref import profile_gemm_toggles_ref
@@ -68,7 +68,7 @@ def test_batched_ragged_set_bit_exact(engine, interpret):
             job.a, job.w, job.rows, job.cols, job.b_h, job.b_v
         )
         assert _counts(p) == ref, job.name
-        s = profile_ws_gemm(
+        s = profile_gemm(
             job.a, job.w, job.rows, job.cols, job.b_h, job.b_v,
             backend="pallas", use_cache=False,
         )
@@ -83,7 +83,7 @@ def test_batched_matches_serial_on_long_streams():
     (p,), _ = run_profile_batch(
         [ProfileJob(rows=32, cols=32, b_h=16, b_v=37, a=a, w=w)], use_cache=False
     )
-    s = profile_ws_gemm(a, w, 32, 32, 16, 37, backend="pallas", use_cache=False)
+    s = profile_gemm(a, w, 32, 32, 16, 37, backend="pallas", use_cache=False)
     assert _counts(p) == _counts(s)
 
 
@@ -98,7 +98,7 @@ def test_geometry_sweep_shares_one_pass():
     profiles, stats = run_profile_batch(jobs, use_cache=False)
     assert stats.passes == 1 and stats.pass_reuse == 2
     for c, p in zip((32, 16, 8), profiles):
-        s = profile_ws_gemm(a, w, 32, c, 16, 37, backend="pallas", use_cache=False)
+        s = profile_gemm(a, w, 32, c, 16, 37, backend="pallas", use_cache=False)
         assert _counts(p) == _counts(s)
     # different rows => new v pass required
     jobs.append(ProfileJob(rows=16, cols=32, b_h=16, b_v=37, a=a, w=w))
@@ -142,7 +142,7 @@ def test_intra_batch_dedup_and_cache_accounting():
     assert profiles2[0] == profiles[0]
     # the cache is shared with the serial API (same keys)
     hits_before = profile_cache_info()["hits"]
-    profile_ws_gemm(a, w, 16, 8, 16, 37)
+    profile_gemm(a, w, 16, 8, 16, 37)
     assert profile_cache_info()["hits"] == hits_before + 1
     clear_profile_cache()
 
@@ -160,7 +160,7 @@ def test_serial_fallbacks_and_degenerate_shapes():
     with pytest.warns(RuntimeWarning):
         profiles, stats = run_profile_batch(jobs, use_cache=False)
     assert stats.serial_fallbacks == 2 and stats.passes == 1
-    s_wide = profile_ws_gemm(wide_a, wide_w, 8, 8, 16, 37, backend="numpy",
+    s_wide = profile_gemm(wide_a, wide_w, 8, 8, 16, 37, backend="numpy",
                              use_cache=False)
     assert profiles[0] == s_wide
     assert profiles[1].h_transitions == 0 and profiles[1].a_v == 0.0
@@ -204,14 +204,14 @@ def test_lazy_jobs_and_shape_validation():
         ProfileJob(rows=8, cols=8, b_h=16, b_v=37, make=lambda: (a, w)).gemm_shape()
 
 
-def test_profile_ws_gemms_wrapper_and_order():
+def test_profile_gemms_wrapper_and_order():
     jobs = []
     expect = []
     for m, k, n in [(9, 5, 4), (21, 17, 3), (6, 2, 2)]:
         a, w = _rand_gemm(m, k, n, lo=-200, hi=200)
         jobs.append(ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w))
         expect.append(profile_gemm_toggles_ref(a, w, 8, 8, 16, 37))
-    profiles = profile_ws_gemms(jobs, use_cache=False)
+    profiles = profile_gemms(jobs, use_cache=False)
     assert [_counts(p) for p in profiles] == expect
 
 
@@ -238,3 +238,138 @@ def test_profile_network_matches_serial_layers():
     )
     assert stats_sub.serial_fallbacks == 2
     assert all(0.0 <= p.a_v <= 1.0 for p in sub)
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary jobs: stream buckets, geometry-free pass reuse
+# ---------------------------------------------------------------------------
+
+OS_RAGGED = [
+    # m, k, n, rows, cols, b_h, b_v
+    (7, 5, 3, 16, 8, 16, 16),
+    (33, 70, 10, 16, 8, 16, 12),
+    (100, 37, 29, 16, 8, 8, 8),
+    (257, 40, 33, 16, 16, 37, 33),
+    (12, 300, 16, 8, 8, 16, 16),  # long K: multi-segment stream windows
+]
+
+
+@pytest.mark.parametrize("engine,interpret", [("xla", False), ("pallas", True)])
+def test_batched_os_ragged_set_bit_exact(engine, interpret):
+    jobs = [
+        ProfileJob(
+            rows=r, cols=c, b_h=bh, b_v=bv, a=a, w=w,
+            dataflow="OS", name=f"os{m}x{k}x{n}",
+        )
+        for (m, k, n, r, c, bh, bv) in OS_RAGGED
+        for a, w in [_rand_gemm(m, k, n)]
+    ]
+    profiles, stats = run_profile_batch(
+        jobs, use_cache=False, engine=engine, interpret=interpret
+    )
+    assert stats.serial_fallbacks == 0 and stats.tasks == 0
+    for job, p in zip(jobs, profiles):
+        ref = profile_gemm_toggles_ref(
+            job.a, job.w, job.rows, job.cols, job.b_h, job.b_v, dataflow="OS"
+        )
+        assert _counts(p) == ref, job.name
+        s = profile_gemm(
+            job.a, job.w, job.rows, job.cols, job.b_h, job.b_v,
+            dataflow="OS", backend="pallas", use_cache=False,
+        )
+        assert (p.a_h, p.a_v) == (s.a_h, s.a_v), job.name
+
+
+def test_mixed_ws_os_batch_bit_exact():
+    a, w = _rand_gemm(50, 40, 20, lo=-500, hi=500)
+    jobs = [
+        ProfileJob(rows=16, cols=8, b_h=16, b_v=37, a=a, w=w, dataflow="WS"),
+        ProfileJob(rows=16, cols=8, b_h=16, b_v=16, a=a, w=w, dataflow="OS"),
+    ]
+    profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.serial_fallbacks == 0
+    for job, p in zip(jobs, profiles):
+        assert _counts(p) == profile_gemm_toggles_ref(
+            a, w, job.rows, job.cols, job.b_h, job.b_v, dataflow=job.dataflow
+        ), job.dataflow
+
+
+def test_os_geometry_sweep_shares_stream_passes():
+    """OS stream passes carry no geometry: one A pass + one W pass serve
+    every (rows, cols) combination, bit-exact against per-GEMM calls."""
+    a, w = _rand_gemm(50, 40, 20, lo=-500, hi=500)
+    geoms = [(32, 32), (16, 8), (8, 4)]
+    jobs = [
+        ProfileJob(rows=r, cols=c, b_h=16, b_v=16, a=a, w=w, dataflow="OS")
+        for (r, c) in geoms
+    ]
+    profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.passes == 2 and stats.pass_reuse == 2 * (len(geoms) - 1)
+    for (r, c), p in zip(geoms, profiles):
+        assert _counts(p) == profile_gemm_toggles_ref(
+            a, w, r, c, 16, 16, dataflow="OS"
+        )
+    # different bus width => the affected stream re-profiles, the other reuses
+    jobs.append(ProfileJob(rows=32, cols=32, b_h=16, b_v=12, a=a, w=w, dataflow="OS"))
+    _, stats2 = run_profile_batch(jobs, use_cache=False)
+    assert stats2.passes == 3  # A@16 + W@16 + W@12
+
+
+def test_os_degenerate_and_serial_fallbacks():
+    tiny_a, tiny_w = _rand_gemm(4, 1, 4)  # K < 2: zero transitions
+    wide_a = RNG.integers(-(2**30), 2**30, size=(6, 8))
+    wide_w = RNG.integers(-(2**30), 2**30, size=(8, 4))
+    a, w = _rand_gemm(10, 12, 6, lo=0, hi=50)
+    jobs = [
+        ProfileJob(rows=4, cols=4, b_h=16, b_v=16, a=tiny_a, w=tiny_w, dataflow="OS"),
+        ProfileJob(rows=4, cols=4, b_h=16, b_v=16, a=wide_a, w=wide_w, dataflow="OS"),
+        ProfileJob(rows=4, cols=4, b_h=16, b_v=16, a=a, w=w, dataflow="OS"),
+    ]
+    with pytest.warns(RuntimeWarning):
+        profiles, stats = run_profile_batch(jobs, use_cache=False)
+    assert stats.serial_fallbacks == 2
+    assert profiles[0].h_transitions == 0 and profiles[0].a_v == 0.0
+    assert _counts(profiles[1]) == profile_gemm_toggles_ref(
+        wide_a, wide_w, 4, 4, 16, 16, dataflow="OS"
+    )
+    assert _counts(profiles[2]) == profile_gemm_toggles_ref(
+        a, w, 4, 4, 16, 16, dataflow="OS"
+    )
+
+
+def test_os_cache_roundtrip_and_dataflow_isolation():
+    clear_profile_cache()
+    a, w = _rand_gemm(16, 12, 8, lo=0, hi=100)
+    ws_job = ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w)
+    os_job = ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w, dataflow="OS")
+    profiles, stats = run_profile_batch([ws_job, os_job])
+    assert stats.cache_hits == 0
+    # same operands+geometry, different dataflow: distinct cache entries
+    profiles2, stats2 = run_profile_batch([ws_job, os_job])
+    assert stats2.cache_hits == 2 and stats2.passes == 0
+    assert profiles2[0] == profiles[0] and profiles2[1] == profiles[1]
+    assert profiles[0].a_v != profiles[1].a_v
+    # the cache is shared with the serial API (same v3 keys)
+    hits = profile_cache_info()["hits"]
+    profile_gemm(a, w, 8, 8, 16, 37, dataflow="OS")
+    assert profile_cache_info()["hits"] == hits + 1
+    clear_profile_cache()
+
+
+def test_os_profile_network_matches_serial_layers():
+    layers = [
+        ConvLayer("t1", k=1, h=5, w=5, c=40, m=9, input_density=0.5),
+        ConvLayer("t2", k=3, h=3, w=3, c=7, m=17, input_density=0.4),
+    ]
+    batched, stats = profile_network(
+        layers, rows=16, cols=8, bits=8, dataflow="OS",
+        use_cache=False, return_stats=True,
+    )
+    assert isinstance(stats, BatchStats) and stats.jobs == 2
+    for i, layer in enumerate(layers):
+        job = conv_layer_job(layer, rows=16, cols=8, bits=8, seed=i, dataflow="OS")
+        a, w = job.operands()
+        assert job.b_v == 8  # OS default: operand width, not accumulator width
+        assert _counts(batched[i]) == profile_gemm_toggles_ref(
+            a, w, 16, 8, job.b_h, job.b_v, dataflow="OS"
+        )

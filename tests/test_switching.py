@@ -1,14 +1,20 @@
-"""Switching-activity profiler: toggle counting + WS stream statistics."""
+"""Switching-activity profiler: toggle counting + WS/OS stream statistics,
+the dataflow-generic API, its cache-key regression, and the deprecated WS
+aliases."""
 
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.switching import (
+    _cache_key,
+    clear_profile_cache,
     combine_profiles,
+    os_operand_streams,
     popcount,
-    profile_ws_gemm,
-    profile_ws_tile,
+    profile_cache_info,
+    profile_gemm,
+    profile_tile,
     stream_toggle_rate,
     toggles_between,
     vertical_partial_sums,
@@ -70,7 +76,7 @@ def test_relu_sparsity_lowers_horizontal_activity():
     def act_for_density(density):
         mask = rng.random((256, 32)) < density
         a = np.where(mask, np.abs(rng.integers(0, 2**15, size=(256, 32))), 0)
-        ah, _, _, _ = profile_ws_tile(a, w, b_h=16, b_v=37)
+        ah, _, _, _ = profile_tile(a, w, b_h=16, b_v=37)
         return ah
 
     dense = act_for_density(0.9)
@@ -92,16 +98,16 @@ def test_signed_sums_toggle_more_than_unsigned_inputs():
     w_f = synth_weights(32, 32, seed=3)
     a = quantize_symmetric(a_f, 16).values
     w = quantize_symmetric(w_f, 16).values
-    ah, av, _, _ = profile_ws_tile(a, w, b_h=16, b_v=37)
+    ah, av, _, _ = profile_tile(a, w, b_h=16, b_v=37)
     assert av > ah
 
 
-def test_profile_ws_gemm_full_vs_subsampled_close():
+def test_profile_gemm_full_vs_subsampled_close():
     rng = np.random.default_rng(3)
     a = rng.integers(0, 1000, size=(64, 64))
     w = rng.integers(-1000, 1000, size=(64, 48))
-    full = profile_ws_gemm(a, w, 32, 32, 16, 37, max_tiles=None, max_stream=None)
-    sub = profile_ws_gemm(a, w, 32, 32, 16, 37, max_tiles=2, max_stream=32)
+    full = profile_gemm(a, w, 32, 32, 16, 37, max_tiles=None, max_stream=None)
+    sub = profile_gemm(a, w, 32, 32, 16, 37, max_tiles=2, max_stream=32)
     assert abs(full.a_v - sub.a_v) < 0.1
     assert abs(full.a_h - sub.a_h) < 0.1
 
@@ -110,8 +116,122 @@ def test_combine_profiles_weighted_by_transitions():
     rng = np.random.default_rng(4)
     a = rng.integers(0, 100, size=(32, 32))
     w = rng.integers(-100, 100, size=(32, 32))
-    p1 = profile_ws_gemm(a, w, 16, 16, 16, 37, max_tiles=None, max_stream=None)
+    p1 = profile_gemm(a, w, 16, 16, 16, 37, max_tiles=None, max_stream=None)
     combined = combine_profiles([p1, p1])
     assert combined.a_h == pytest.approx(p1.a_h)
     assert combined.a_v == pytest.approx(p1.a_v)
     assert combined.h_transitions == 2 * p1.h_transitions
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary dataflow
+# ---------------------------------------------------------------------------
+
+
+def test_os_operand_streams_orientation():
+    a = np.arange(6).reshape(2, 3)  # (Mt, K)
+    w = np.arange(12).reshape(3, 4)  # (K, Nt)
+    h, v = os_operand_streams(a, w)
+    # horizontal: A rows stream over K -> (K, Mt); vertical: W columns -> (K, Nt)
+    np.testing.assert_array_equal(h, a.T)
+    np.testing.assert_array_equal(v, w)
+
+
+def test_profile_tile_os_matches_stream_rates():
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 500, size=(8, 40))  # (Mt, K)
+    w = rng.integers(-500, 500, size=(40, 6))  # (K, Nt)
+    ah, av, ht, vt = profile_tile(a, w, b_h=16, b_v=16, dataflow="OS")
+    assert ah == pytest.approx(stream_toggle_rate(a.T, 16))
+    assert av == pytest.approx(stream_toggle_rate(w, 16))
+    assert ht == 39 * 8 and vt == 39 * 6
+
+
+def test_profile_gemm_os_matches_per_tile_oracle():
+    """Full-GEMM OS numpy path vs the tile-walking reference (different
+    accounting: per-lane totals scaled by tile counts vs per-tile loops)."""
+    from repro.kernels.activity_profile.ref import profile_gemm_toggles_ref
+
+    rng = np.random.default_rng(6)
+    a = rng.integers(-900, 900, size=(33, 21))
+    w = rng.integers(-900, 900, size=(21, 13))
+    p = profile_gemm(a, w, 8, 4, 16, 16, dataflow="OS", backend="numpy", use_cache=False)
+    ref = profile_gemm_toggles_ref(a, w, 8, 4, 16, 16, dataflow="OS")
+    got = (
+        round(p.a_h * p.h_transitions * p.b_h),
+        round(p.a_v * p.v_transitions * p.b_v),
+        p.h_transitions,
+        p.v_transitions,
+    )
+    assert got == ref
+
+
+def test_os_activities_are_geometry_invariant():
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 300, size=(24, 40))
+    w = rng.integers(-300, 300, size=(40, 20))
+    ps = [
+        profile_gemm(a, w, r, c, 8, 8, dataflow="OS", use_cache=False)
+        for (r, c) in [(8, 8), (16, 4), (32, 32)]
+    ]
+    for p in ps[1:]:
+        assert p.a_h == pytest.approx(ps[0].a_h, abs=1e-15)
+        assert p.a_v == pytest.approx(ps[0].a_v, abs=1e-15)
+
+
+def test_os_rejects_subsampling_and_unknown_dataflow():
+    a = np.zeros((4, 4), np.int64)
+    w = np.zeros((4, 4), np.int64)
+    with pytest.raises(ValueError, match="exact-only"):
+        profile_gemm(a, w, 4, 4, 8, 8, max_tiles=1, dataflow="OS")
+    with pytest.raises(ValueError, match="unknown dataflow"):
+        profile_gemm(a, w, 4, 4, 8, 8, dataflow="IS")
+    with pytest.raises(ValueError, match="unknown dataflow"):
+        profile_tile(a, w, 8, 8, dataflow="XX")
+
+
+# ---------------------------------------------------------------------------
+# Cache-key regression + deprecated aliases
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_encodes_dataflow():
+    """Latent-collision regression: WS and OS profiles of identical operands
+    and geometry must never alias in the content cache."""
+    rng = np.random.default_rng(8)
+    a = rng.integers(0, 100, size=(16, 16))
+    w = rng.integers(-100, 100, size=(16, 16))
+    k_ws = _cache_key(a, w, 8, 8, 16, 16, ("pallas", "WS", "exact"))
+    k_os = _cache_key(a, w, 8, 8, 16, 16, ("pallas", "OS", "exact"))
+    assert k_ws != k_os
+    # end to end: both dataflows cached under the same operands+geometry,
+    # each served its own profile
+    clear_profile_cache()
+    p_ws = profile_gemm(a, w, 8, 8, 16, 16, dataflow="WS")
+    p_os = profile_gemm(a, w, 8, 8, 16, 16, dataflow="OS")
+    assert profile_cache_info()["misses"] == 2
+    assert profile_gemm(a, w, 8, 8, 16, 16, dataflow="WS") is p_ws
+    assert profile_gemm(a, w, 8, 8, 16, 16, dataflow="OS") is p_os
+    assert profile_cache_info()["hits"] == 2
+    assert p_ws.a_v != p_os.a_v
+    clear_profile_cache()
+
+
+def test_deprecated_ws_aliases_warn_and_forward():
+    from repro.core.switching import profile_ws_gemm, profile_ws_gemms, profile_ws_tile
+    from repro.core.pipeline import ProfileJob
+
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 100, size=(12, 8))
+    w = rng.integers(-100, 100, size=(8, 4))
+    with pytest.warns(DeprecationWarning, match="profile_ws_gemm is deprecated"):
+        old = profile_ws_gemm(a, w, 8, 4, 16, 37, use_cache=False)
+    assert old == profile_gemm(a, w, 8, 4, 16, 37, use_cache=False)
+    with pytest.warns(DeprecationWarning, match="profile_ws_tile is deprecated"):
+        old_tile = profile_ws_tile(a, w, 16, 37)
+    assert old_tile == profile_tile(a, w, 16, 37)
+    with pytest.warns(DeprecationWarning, match="profile_ws_gemms is deprecated"):
+        (old_batch,) = profile_ws_gemms(
+            [ProfileJob(rows=8, cols=4, b_h=16, b_v=37, a=a, w=w)], use_cache=False
+        )
+    assert (old_batch.a_h, old_batch.a_v) == (old.a_h, old.a_v)

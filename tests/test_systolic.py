@@ -1,4 +1,4 @@
-"""WS systolic functional + timing model."""
+"""Systolic functional + timing models under both dataflows."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +6,10 @@ import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.systolic import (
+    DATAFLOWS,
+    matmul_reference,
+    os_matmul_reference,
+    os_tile_cycles,
     schedule_gemm,
     schedule_many,
     ws_matmul_reference,
@@ -56,3 +60,64 @@ def test_schedule_many_aggregates():
     parts = [schedule_gemm(*g, 32, 32) for g in gemms]
     assert agg.total_cycles == sum(p.total_cycles for p in parts)
     assert agg.useful_macs == sum(p.useful_macs for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary dataflow
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 16),
+)
+def test_os_tiled_execution_exact(m, k, n, rows, cols):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n + 7)
+    a = jnp.asarray(rng.integers(-50, 50, size=(m, k)), dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(-50, 50, size=(k, n)), dtype=jnp.int32)
+    got = os_matmul_reference(a, w, rows, cols)
+    assert jnp.all(got == a @ w)
+    assert jnp.all(matmul_reference(a, w, rows, cols, dataflow="OS") == a @ w)
+
+
+def test_os_tile_cycles_formula():
+    # (R + C - 2) + K + R: skew + reduction stream + output drain
+    assert os_tile_cycles(32, 32, 100) == 62 + 100 + 32
+
+
+def test_os_schedule_tile_counts():
+    s = schedule_gemm(m=100, k=70, n=50, rows=32, cols=32, dataflow="OS")
+    assert s.dataflow == "OS"
+    # OS tiles the OUTPUT: ceil(100/32) x ceil(50/32); K streams through time
+    assert s.m_tiles == 4 and s.n_tiles == 2 and s.k_tiles == 1
+    assert s.total_tiles == 8 and s.stream_len == 70
+    assert s.total_cycles == 8 * os_tile_cycles(32, 32, 70)
+    assert s.useful_macs == 100 * 70 * 50
+    assert 0 < s.utilization <= 1.0
+
+
+def test_ws_schedule_unchanged_by_dispatch():
+    s = schedule_gemm(m=100, k=70, n=50, rows=32, cols=32)
+    assert s.dataflow == "WS" and s.m_tiles == 1 and s.stream_len == 100
+    assert s.k_tiles == 3 and s.n_tiles == 2 and s.total_tiles == 6
+    assert s.total_cycles == 6 * ws_tile_cycles(32, 32, 100)
+
+
+def test_os_utilization_improves_with_deeper_reduction():
+    small = schedule_gemm(m=32, k=10, n=32, rows=32, cols=32, dataflow="OS")
+    large = schedule_gemm(m=32, k=10000, n=32, rows=32, cols=32, dataflow="OS")
+    assert large.utilization > small.utilization > 0
+
+
+def test_schedule_many_os_and_unknown_dataflow():
+    gemms = [(100, 64, 64), (50, 32, 96)]
+    agg = schedule_many(gemms, 32, 32, dataflow="OS")
+    parts = [schedule_gemm(*g, 32, 32, dataflow="OS") for g in gemms]
+    assert agg.total_cycles == sum(p.total_cycles for p in parts)
+    with pytest.raises(ValueError, match="unknown dataflow"):
+        schedule_gemm(10, 10, 10, 4, 4, dataflow="ZZ")
+    assert set(DATAFLOWS) == {"WS", "OS"}
