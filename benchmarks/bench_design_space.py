@@ -304,6 +304,58 @@ def run(smoke: bool = False) -> list[dict]:
         }
     )
 
+    # --- mean-lane approximation error of the aggregate-activity path ------
+    # ``bus_switched_capacitance_arr`` consumers price every wire of a bus at
+    # the AGGREGATE activity ``a`` — exactly the mean-lane approximation of
+    # the per-lane roll-up (sum of lane activities == a * width), so it is
+    # EXACT whenever every segment carries the full bus (the uniform family)
+    # and an approximation the moment segment widths vary per lane (multi-pod
+    # interior buses carry only the low pod-accumulator lanes).  Quantify
+    # both on measured per-lane profiles.
+    from repro.core.workloads import measured_design_lane_activities
+    from repro.layout import evaluate_layout_space
+
+    lane_space = DesignSpace(
+        rows=(8,) if smoke else (32,),
+        cols=(8, 16) if smoke else (16, 32),
+        input_bits=(8,) if smoke else (16,),
+    )
+    lane_grid = lane_space.expand()
+    lane_layers = layers[:2]
+    l_ah, l_av, h_lanes, v_lanes = measured_design_lane_activities(
+        lane_grid, lane_layers
+    )
+    lane_layouts = ("uniform", "pods4x4")
+    ev_lane = evaluate_layout_space(
+        lane_grid, l_ah, l_av, layouts=lane_layouts,
+        h_lanes=h_lanes, v_lanes=v_lanes, use_jit=False,
+    )
+    ev_mean = evaluate_layout_space(
+        lane_grid, l_ah, l_av, layouts=lane_layouts, use_jit=False
+    )
+    rel = np.abs(ev_lane.bus_power_robust / ev_mean.bus_power_robust - 1.0)
+    err_uniform = float(rel[0].max())
+    err_pods = float(rel[1].max())
+    assert err_uniform < 1e-9, (
+        f"mean-lane approximation must be exact on the uniform family "
+        f"(got {err_uniform:.2e})"
+    )
+    assert err_pods > 0.0, "per-lane roll-up identical to mean-lane on pods?"
+    out.append(
+        {
+            "name": "layout/lane_approx_error",
+            "us_per_call": 0.0,
+            "dataflow": "WS",
+            "layout": "+".join(lane_layouts),
+            "derived": (
+                f"aggregate-a (mean-lane) vs per-lane roll-up over "
+                f"{lane_grid.n_points} points x {l_ah.shape[0]} workloads: "
+                f"uniform rel err {err_uniform:.1e} (exact), "
+                f"pods4x4 rel err {err_pods:.2e} (lane-subset buses)"
+            ),
+        }
+    )
+
     # --- legacy closed-form composition row (continuity with older runs) ---
     geom = SystolicArrayGeometry.paper_32x32()
     act = BusActivity.paper_resnet50()

@@ -9,7 +9,9 @@ bench_network_profile).
 ``--json PATH`` additionally writes the rows (plus per-module status) as a
 JSON document; CI uploads it as a workflow artifact so regressions can be
 diffed across runs.  Each JSON row records a ``dataflow`` field ("WS",
-"OS", "WS+OS", or "" when the row is dataflow-agnostic).
+"OS", "WS+OS", or "" when the row is dataflow-agnostic) and a ``layout``
+field (a layout-family name, "+"-joined names, or "" when the row is
+layout-agnostic).
 """
 
 from __future__ import annotations
@@ -26,6 +28,7 @@ from benchmarks import (
     bench_design_space,
     bench_fig4_fig5_power,
     bench_kernels,
+    bench_layout,
     bench_mxu_scale,
     bench_network_profile,
     bench_table1_layers,
@@ -37,6 +40,7 @@ MODULES = [
     ("fig4_fig5_power", bench_fig4_fig5_power),
     ("mxu_scale", bench_mxu_scale),
     ("design_space", bench_design_space),
+    ("layout", bench_layout),
     ("kernels", bench_kernels),
     ("activity_profile", bench_activity_profile),
     ("network_profile", bench_network_profile),
@@ -70,6 +74,7 @@ def main(argv: list[str] | None = None) -> None:
                         "us_per_call": float(row["us_per_call"]),
                         "derived": str(row["derived"]),
                         "dataflow": str(row.get("dataflow", "")),
+                        "layout": str(row.get("layout", "")),
                     }
                 )
             report["modules"][name] = "ok"

@@ -95,3 +95,50 @@ for i in top:
         f"{grid.describe(int(i)):>22} {int(rank_apx[i]):10d} {int(rank[i]):11d} "
         f"{float(ev_apx.aspect_robust[i]):10.2f} {float(ev.aspect_robust[i]):11.2f}"
     )
+
+# --- the layout-family axis: beyond the uniform rectangle -------------------
+# The closed form can only describe uniform rectangles.  The segment-level
+# engine (repro.layout) evaluates every point under every floorplan family —
+# here with a 4:1 die-envelope constraint, the physical regime in which
+# folded/serpentine and multi-pod layouts exist in the first place.
+from repro.core.design_space import evaluate_layout_design_space  # noqa: E402
+from repro.layout import LayoutPowerConfig  # noqa: E402
+
+lspace = DesignSpace(
+    rows=(8, 16, 32),
+    cols=(32, 64, 128),
+    input_bits=(16,),
+    dataflows=("WS", "OS"),
+    layouts=("uniform", "serpentine2", "serpentine4", "pods2x2"),
+)
+lgrid = lspace.expand()
+la_h, la_v = measured_design_activities(lgrid, layers)
+lev = evaluate_layout_design_space(
+    lspace, la_h, la_v, cfg=LayoutPowerConfig(max_envelope_aspect=4.0)
+)
+
+print(f"\nlayout families x {lgrid.n_points} geometry points under a 4:1 "
+      f"die-envelope limit ({', '.join(lev.layouts)}):")
+# per (workload, point): which family minimizes that workload's bus power?
+# (infeasible cells are +inf, so a plain argmin is total and never raises)
+win = np.argmin(np.where(np.isfinite(lev.bus_power_opt), lev.bus_power_opt, np.inf), axis=1)
+names = np.asarray(lev.layouts)
+for li, name in enumerate(lev.layouts):
+    print(f"  {name:>12}: best for {int((win == li).sum()):3d} of {win.size} "
+          f"(workload, point) cells")
+non_uniform = int((win != 0).sum())
+assert non_uniform > 0, "expected at least one non-uniform winner"
+w_i, p_i = np.unravel_index(
+    np.argmax(lev.bus_power_opt[:, 0, :] / np.min(
+        np.where(np.isfinite(lev.bus_power_opt), lev.bus_power_opt, np.inf), axis=1)),
+    (la_h.shape[0], lgrid.n_points),
+)
+li = int(win[w_i, p_i])
+p_uni = float(lev.bus_power_opt[w_i, 0, p_i])
+p_best = float(lev.bus_power_opt[w_i, li, p_i])
+print(
+    f"largest win: workload {layers[int(w_i)].name} on {lgrid.describe(int(p_i))} "
+    f"-> {names[li]} saves {(1 - p_best / p_uni)*100:.1f}% bus power vs the "
+    f"uniform rectangle (W/H* {float(lev.aspect_opt[w_i, li, p_i]):.2f} vs "
+    f"{float(lev.aspect_opt[w_i, 0, p_i]):.2f})"
+)

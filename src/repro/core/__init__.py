@@ -21,6 +21,7 @@ from repro.core.design_space import (  # noqa: F401
     DesignSpace,
     DesignSpaceEval,
     evaluate_design_space,
+    evaluate_layout_design_space,
     pareto_mask,
     sweep_bus_power,
 )

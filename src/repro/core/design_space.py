@@ -77,6 +77,7 @@ __all__ = [
     "DesignGrid",
     "DesignSpaceEval",
     "evaluate_design_space",
+    "evaluate_layout_design_space",
     "sweep_bus_power",
     "pareto_mask",
 ]
@@ -111,6 +112,14 @@ class DesignSpace:
       bus_invert       whether the vertical bus is BI-coded (B_v += 1 invert
                        line, a_v -> coded activity at evaluation time).
       pe_area_um2      per-PE area.
+      layouts          physical layout families (names from
+                       ``repro.layout.LAYOUTS``) to pair every geometry
+                       point with.  The layout axis is evaluated by the
+                       segment-level engine (``evaluate_layout_design_space``
+                       / ``repro.layout.power.evaluate_layout_space``), NOT
+                       flattened into the point axis: the closed-form
+                       ``evaluate_design_space`` only describes the uniform
+                       family.
     ``aspect_lo``/``aspect_hi`` bound the practical aspect envelope shared by
     every optimization in the evaluation.
     """
@@ -123,6 +132,7 @@ class DesignSpace:
     pe_area_um2: Sequence[float] = (1200.0,)
     aspect_lo: float = ASPECT_MIN
     aspect_hi: float = ASPECT_MAX
+    layouts: Sequence[str] = ("uniform",)
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "rows", _as_tuple(self.rows, int))
@@ -131,6 +141,16 @@ class DesignSpace:
         object.__setattr__(self, "dataflows", _as_tuple(self.dataflows, str))
         object.__setattr__(self, "bus_invert", _as_tuple(self.bus_invert, bool))
         object.__setattr__(self, "pe_area_um2", _as_tuple(self.pe_area_um2, float))
+        object.__setattr__(self, "layouts", _as_tuple(self.layouts, str))
+        if not self.layouts:
+            raise ValueError("layouts axis must be non-empty")
+        from repro.layout.geometry import LAYOUTS as _REGISTRY
+
+        unknown = [n for n in self.layouts if n not in _REGISTRY]
+        if unknown:
+            raise ValueError(
+                f"unknown layout families {unknown}; registered: {sorted(_REGISTRY)}"
+            )
         for name in ("rows", "cols", "input_bits"):
             vals = getattr(self, name)
             if not vals or any(v < 1 for v in vals):
@@ -558,6 +578,47 @@ def sweep_bus_power(
         aspects,
     )
     return np.asarray(out)
+
+
+def evaluate_layout_design_space(
+    space_or_grid,
+    a_h,
+    a_v,
+    *,
+    layouts: Sequence[str] | None = None,
+    **kwargs,
+):
+    """Evaluate the design grid across its LAYOUT-FAMILY axis.
+
+    The segment-level entry point of the exploration engine: where
+    ``evaluate_design_space`` collapses every point to the closed-form
+    uniform rectangle, this pairs each point with every family of the
+    layout axis (``DesignSpace.layouts``, or an explicit ``layouts=``) and
+    runs the jitted segment-class evaluator —
+    ``repro.layout.power.evaluate_layout_space`` — over the (point x
+    layout) batch: envelope-constrained optimal aspects, data-net powers,
+    overheads, and the best family per point.  Accepts a ``DesignSpace``
+    (expanded here) or a ``DesignGrid``; see ``evaluate_layout_space`` for
+    the remaining keyword arguments (per-lane activities, weights,
+    ``LayoutPowerConfig``...).
+    """
+    from repro.layout.power import evaluate_layout_space
+
+    if isinstance(space_or_grid, DesignSpace):
+        if layouts is None:
+            layouts = space_or_grid.layouts
+        grid = space_or_grid.expand()
+    else:
+        grid = space_or_grid
+        if layouts is None:
+            # A bare grid does not carry the layout axis (expand() keeps the
+            # point axis geometry-only); silently defaulting would drop
+            # whatever the user configured on the space.
+            raise ValueError(
+                "pass layouts= explicitly when evaluating a DesignGrid "
+                "(or pass the DesignSpace, whose layouts axis is used)"
+            )
+    return evaluate_layout_space(grid, a_h, a_v, layouts=layouts, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -221,7 +221,20 @@ def optimal_aspect_power_arr(
 def bus_switched_capacitance_arr(
     rows, cols, b_h, b_v, pe_area, a_h, a_v, aspect, wire_cap_f_per_um=0.20e-15, xp=None
 ):
-    """Average switched wire capacitance per cycle [F] (see ``bus_power``)."""
+    """Average switched wire capacitance per cycle [F] (see ``bus_power``).
+
+    Uniform-activity assumption: every wire of a bus is priced at the
+    aggregate activity ``a`` — i.e. ``a * bits`` switching wires per
+    transition.  This is exactly the MEAN-LANE approximation of the
+    per-bit-lane roll-up (``sum(lane_activities) == a * bits`` by
+    construction, so the two agree bit-for-bit whenever every segment
+    carries the full bus — the case this closed form describes).  It stops
+    being exact once segment widths vary per lane (e.g. multi-pod
+    pod-local accumulator buses); ``repro.layout.power`` prices those from
+    measured ``ActivityProfile.h_lane_toggles``/``v_lane_toggles``, and
+    ``benchmarks/bench_design_space.py``'s ``layout/lane_approx_error``
+    row tracks the gap.
+    """
     xp = xp or _xp(rows, pe_area, a_h, aspect)
     return wire_cap_f_per_um * (
         a_h * wirelength_h_arr(rows, cols, b_h, pe_area, aspect, xp=xp)

@@ -68,6 +68,7 @@ __all__ = [
     "popcount",
     "toggles_between",
     "stream_toggle_rate",
+    "stream_lane_toggles",
     "horizontal_stream",
     "vertical_partial_sums",
     "os_operand_streams",
@@ -137,6 +138,27 @@ def stream_toggle_rate(stream: np.ndarray, bits: int, axis: int = 0) -> float:
     return float(np.mean(toggles_between(cur, nxt, bits))) / float(bits)
 
 
+def stream_lane_toggles(stream: np.ndarray, bits: int, axis: int = 0) -> np.ndarray:
+    """Per-bit-lane toggle totals along ``axis`` of a value stream: (bits,) int64.
+
+    Entry b counts the flips of bus bit-lane b (LSB first) summed over every
+    transition and every wire bundle in the stream; ``result.sum() ==
+    bits * stream_toggle_rate(...) * transitions`` holds bit-exactly.  The
+    numpy lane oracle behind ``profile_gemm(..., lane_detail=True)``.
+    """
+    s = np.asarray(stream)
+    out = np.zeros(bits, np.int64)
+    if s.shape[axis] < 2:
+        return out
+    cur = np.take(s, range(0, s.shape[axis] - 1), axis=axis)
+    nxt = np.take(s, range(1, s.shape[axis]), axis=axis)
+    x = _to_bus_repr(cur, bits) ^ _to_bus_repr(nxt, bits)
+    one = np.uint64(1)
+    for b in range(bits):
+        out[b] = int(((x >> np.uint64(b)) & one).sum())
+    return out
+
+
 def horizontal_stream(a_tile: np.ndarray) -> np.ndarray:
     """The per-row horizontal bus streams for one WS tile.
 
@@ -194,6 +216,17 @@ class ActivityProfile:
     ``input_elements`` is the number of operand elements behind
     ``input_zero_fraction`` (0 for hand-built profiles — ``combine_profiles``
     then falls back to an unweighted mean for the zero fraction).
+
+    ``h_lane_toggles`` / ``v_lane_toggles`` (present when profiled with
+    ``lane_detail=True``) are the exact per-bit-lane toggle totals, LSB
+    first: lane b of the ``b_h``/``b_v``-wide bus toggled that many times
+    over ``h_transitions``/``v_transitions`` bundle transitions.  The lane
+    sums reproduce the aggregate counts bit-exactly
+    (``sum(h_lane_toggles) == round(a_h * h_transitions * b_h)``), and the
+    mean of ``a_h_lanes`` is ``a_h`` — the aggregate activity IS the
+    mean-lane approximation of the per-lane profile.  The segment-level
+    layout engine (``repro.layout``) consumes the per-lane arrays to price
+    buses that carry only a lane subset (e.g. multi-pod partial-sum buses).
     """
 
     a_h: float
@@ -204,6 +237,22 @@ class ActivityProfile:
     v_transitions: int
     input_zero_fraction: float
     input_elements: int = 0
+    h_lane_toggles: tuple[int, ...] | None = None
+    v_lane_toggles: tuple[int, ...] | None = None
+
+    @property
+    def a_h_lanes(self) -> np.ndarray | None:
+        """(b_h,) per-lane horizontal activities (toggles per transition)."""
+        if self.h_lane_toggles is None:
+            return None
+        return np.asarray(self.h_lane_toggles, float) / max(self.h_transitions, 1)
+
+    @property
+    def a_v_lanes(self) -> np.ndarray | None:
+        """(b_v,) per-lane vertical activities (toggles per transition)."""
+        if self.v_lane_toggles is None:
+            return None
+        return np.asarray(self.v_lane_toggles, float) / max(self.v_transitions, 1)
 
     def as_bus_activity(self):
         from repro.core.floorplan import BusActivity
@@ -379,10 +428,12 @@ def _cache_key(
 ) -> bytes:
     """Content cache key.  ``mode`` is ``(backend, dataflow, *plan)`` — the
     dataflow MUST be encoded: WS and OS profiles of identical operands and
-    geometry measure different streams and must never alias (the "v3" bump
-    retires any pre-dataflow key shape)."""
+    geometry measure different streams and must never alias.  The "v4" bump
+    adds the lane-detail flag to the plan (lane-resolved profiles carry
+    strictly more data than aggregate ones and must not alias them; it also
+    retires any pre-lane "v3" entry shape)."""
     h = hashlib.sha256()
-    h.update(repr(("v3", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
+    h.update(repr(("v4", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
     for arr in (a, w):
         h.update(_operand_digest(arr))
     return h.digest()
@@ -418,6 +469,44 @@ def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
     a_h = h_num / h_den if h_den else 0.0
     a_v = v_num / v_den if v_den else 0.0
     return a_h, a_v, h_den, v_den
+
+
+def _lane_profile_numpy(
+    a: np.ndarray, w: np.ndarray, rows: int, cols: int, b_h: int, b_v: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side WS per-lane oracle: exact (b_h,)/(b_v,) lane toggle totals.
+
+    Materializes the per-tile (T, R, C) partial-sum tensor like the
+    aggregate oracle — slow, kept as the verification reference for the
+    lane-resolved XLA pass.
+    """
+    m, k = a.shape
+    n = w.shape[1]
+    n_tiles = -(-n // cols) if n else 0
+    h_lanes = stream_lane_toggles(a, b_h) * n_tiles
+    v_lanes = np.zeros(b_v, np.int64)
+    for k0 in range(0, k, rows):
+        for n0 in range(0, n, cols):
+            ps = vertical_partial_sums(a[:, k0 : k0 + rows], w[k0 : k0 + rows, n0 : n0 + cols])
+            v_lanes += stream_lane_toggles(ps.reshape(m, -1), b_v)
+    return h_lanes, v_lanes
+
+
+def _lane_profile_numpy_os(
+    a: np.ndarray, w: np.ndarray, rows: int, cols: int, b_h: int, b_v: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side OS per-lane oracle (the lane form of ``_profile_numpy_os``)."""
+    m, k = a.shape
+    n = w.shape[1]
+    if k < 2 or m == 0 or n == 0:
+        return np.zeros(b_h, np.int64), np.zeros(b_v, np.int64)
+    h_streams, v_streams = os_operand_streams(a, w)
+    n_tiles = -(-n // cols)
+    m_tiles = -(-m // rows)
+    return (
+        stream_lane_toggles(h_streams, b_h) * n_tiles,
+        stream_lane_toggles(v_streams, b_v) * m_tiles,
+    )
 
 
 def os_stream_counts(
@@ -495,6 +584,7 @@ def profile_gemm(
     dataflow: str = "WS",
     backend: str | None = None,
     use_cache: bool = True,
+    lane_detail: bool = False,
 ) -> ActivityProfile:
     """Profile the full GEMM ``a @ w`` tiled onto an R x C systolic array.
 
@@ -511,6 +601,14 @@ def profile_gemm(
     subsample from ``seed``.  OS profiling is exact-only: its work is
     O(M*K + K*N) with no partial-sum tensor anywhere, so there is nothing
     worth subsampling (passing the limits with OS raises).
+
+    ``lane_detail=True`` additionally measures the exact per-bit-lane toggle
+    totals (``ActivityProfile.h_lane_toggles``/``v_lane_toggles``; the
+    aggregate activities are then derived from the lane sums, so aggregate
+    and lanes can never disagree).  Lane-resolved profiling is exact-only
+    (combining it with the subsample limits raises) and costs a lane-fan-out
+    pass — roughly ``bus_width`` reductions where the aggregate engine runs
+    one popcount — so it is an explicit opt-in.
     """
     a = np.asarray(a, dtype=np.int64)
     w = np.asarray(w, dtype=np.int64)
@@ -529,7 +627,13 @@ def profile_gemm(
         (max_tiles is not None and total_tiles > max_tiles)
         or (max_stream is not None and m > max_stream)
     )
+    if lane_detail and not exact:
+        raise ValueError(
+            "lane_detail requires exact profiling; drop max_tiles/max_stream"
+        )
     mode: tuple = ("exact",) if exact else ("sub", max_tiles, max_stream, seed)
+    if lane_detail:
+        mode = (*mode, "lanes")
 
     # Resolve the backend BEFORE the cache lookup and key on it: the two
     # backends agree to float rounding, but an explicit backend= request
@@ -544,7 +648,27 @@ def profile_gemm(
         if hit is not None:
             return hit
 
-    if dataflow == "OS":
+    h_lanes = v_lanes = None
+    if lane_detail:
+        if resolved == "pallas":
+            from repro.kernels.activity_profile.ops import profile_gemm_lane_toggles
+
+            lc = profile_gemm_lane_toggles(a, w, rows, cols, b_h, b_v, dataflow=dataflow)
+            h_lanes = np.asarray(lc.h_lanes, np.int64)
+            v_lanes = np.asarray(lc.v_lanes, np.int64)
+            h_den, v_den = lc.h_transitions, lc.v_transitions
+        else:
+            lane_fn = _lane_profile_numpy_os if dataflow == "OS" else _lane_profile_numpy
+            h_lanes, v_lanes = lane_fn(a, w, rows, cols, b_h, b_v)
+            if dataflow == "OS":
+                _, _, h_den, v_den = os_stream_counts(0, 0, m, k, n, rows, cols)
+            else:
+                n_tiles = -(-n // cols) if n else 0
+                h_den = max(m - 1, 0) * k * n_tiles
+                v_den = max(m - 1, 0) * k * n
+        a_h = int(h_lanes.sum()) / (h_den * b_h) if h_den else 0.0
+        a_v = int(v_lanes.sum()) / (v_den * b_v) if v_den else 0.0
+    elif dataflow == "OS":
         if resolved == "pallas":
             a_h, a_v, h_den, v_den = _profile_fused(
                 a, w, rows, cols, b_h, b_v, None, True, dataflow="OS"
@@ -571,6 +695,8 @@ def profile_gemm(
         v_transitions=v_den,
         input_zero_fraction=float(np.mean(a == 0)),
         input_elements=int(a.size),
+        h_lane_toggles=None if h_lanes is None else tuple(int(v) for v in h_lanes),
+        v_lane_toggles=None if v_lanes is None else tuple(int(v) for v in v_lanes),
     )
     if key is not None:
         _cache_put(key, profile)
@@ -635,12 +761,22 @@ def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
     10M-element one). If ANY profile lacks an element count
     (``input_elements == 0``, e.g. hand-built), the zero fraction falls back
     to an unweighted mean over all profiles — no profile is silently
-    dropped from it.
+    dropped from it.  Per-bit-lane toggle totals combine by elementwise sum
+    (lane counts are additive) when EVERY profile carries them at matching
+    widths, else the combined profile drops them.
     """
     profiles = list(profiles)
     if not profiles:
         raise ValueError("no profiles to combine")
     b_h, b_v = profiles[0].b_h, profiles[0].b_v
+
+    def _sum_lanes(attr):
+        vals = [getattr(p, attr) for p in profiles]
+        if any(v is None for v in vals) or len({len(v) for v in vals}) != 1:
+            return None
+        total = np.sum([np.asarray(v, np.int64) for v in vals], axis=0)
+        return tuple(int(v) for v in total)
+
     h_den = sum(p.h_transitions for p in profiles)
     v_den = sum(p.v_transitions for p in profiles)
     a_h = sum(p.a_h * p.h_transitions for p in profiles) / max(h_den, 1)
@@ -662,4 +798,6 @@ def combine_profiles(profiles: Iterable[ActivityProfile]) -> ActivityProfile:
         v_transitions=v_den,
         input_zero_fraction=float(zf),
         input_elements=elems,
+        h_lane_toggles=_sum_lanes("h_lane_toggles"),
+        v_lane_toggles=_sum_lanes("v_lane_toggles"),
     )

@@ -32,6 +32,7 @@ __all__ = [
     "gemm_job",
     "profile_network",
     "measured_design_activities",
+    "measured_design_lane_activities",
     "gemms_for_arch",
 ]
 
@@ -126,6 +127,7 @@ def profile_conv_layer(
     backend: str | None = None,
     use_cache: bool = True,
     dataflow: str = "WS",
+    lane_detail: bool = False,
 ) -> ActivityProfile:
     """Quantize a synthetic instance of ``layer`` to int-``bits`` and profile it
     on an R x C array (the paper's Section IV methodology, with synthetic
@@ -133,8 +135,10 @@ def profile_conv_layer(
 
     Exact full-stream profile by default (fused engine); pass
     ``max_tiles``/``max_stream`` to opt into the subsampled estimate (WS
-    only — OS profiling is exact by construction).  Repeat calls hit the
-    content-keyed profile cache.
+    only — OS profiling is exact by construction).  ``lane_detail=True``
+    also measures the exact per-bit-lane toggle totals (for the segment-
+    level layout engine).  Repeat calls hit the content-keyed profile
+    cache.
     """
     g = conv_to_gemm(layer)
     a_f = synth_activations(g.m, g.k, layer.input_density, seed=seed)
@@ -155,6 +159,7 @@ def profile_conv_layer(
         dataflow=dataflow,
         backend=backend,
         use_cache=use_cache,
+        lane_detail=lane_detail,
     )
 
 
@@ -301,6 +306,39 @@ def profile_network(
     return (profiles, stats) if return_stats else profiles
 
 
+def _activity_classes(grid) -> tuple[list[tuple], np.ndarray]:
+    """The grid's activity classes + the (P,) class index of every point.
+
+    WS classes are ``("WS", rows, b_h, b_v_data)``; OS classes are the
+    geometry-free ``("OS", b_h, b_v_data)`` (see
+    ``measured_design_activities`` for why these are the invariants).
+    """
+    os_mask = np.asarray(grid.dataflow_os, bool)
+    keys = np.stack(
+        [
+            np.asarray(grid.rows),
+            np.asarray(grid.b_h),
+            np.asarray(grid.b_v_data),
+            os_mask.astype(np.int64),
+        ],
+        axis=1,
+    )
+    uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
+    classes: list[tuple] = []
+    class_index: dict[tuple, int] = {}
+    uniq_class = np.empty(len(uniq), np.int64)
+    for u, (r, b_h, b_v, os_flag) in enumerate(uniq):
+        # OS activities are geometry-free: rows drops out of the class key.
+        key = ("OS", int(b_h), int(b_v)) if os_flag else ("WS", int(r), int(b_h), int(b_v))
+        idx = class_index.get(key)
+        if idx is None:
+            idx = len(classes)
+            classes.append(key)
+            class_index[key] = idx
+        uniq_class[u] = idx
+    return classes, uniq_class[inverse]
+
+
 def measured_design_activities(
     grid,
     layers: Sequence[ConvLayer] = RESNET50_TABLE1,
@@ -349,29 +387,7 @@ def measured_design_activities(
     layers = list(layers)
     if not layers:
         raise ValueError("no workload layers")
-    os_mask = np.asarray(grid.dataflow_os, bool)
-    keys = np.stack(
-        [
-            np.asarray(grid.rows),
-            np.asarray(grid.b_h),
-            np.asarray(grid.b_v_data),
-            os_mask.astype(np.int64),
-        ],
-        axis=1,
-    )
-    uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
-    classes: list[tuple] = []
-    class_index: dict[tuple, int] = {}
-    uniq_class = np.empty(len(uniq), np.int64)
-    for u, (r, b_h, b_v, os_flag) in enumerate(uniq):
-        # OS activities are geometry-free: rows drops out of the class key.
-        key = ("OS", int(b_h), int(b_v)) if os_flag else ("WS", int(r), int(b_h), int(b_v))
-        idx = class_index.get(key)
-        if idx is None:
-            idx = len(classes)
-            classes.append(key)
-            class_index[key] = idx
-        uniq_class[u] = idx
+    classes, point_class = _activity_classes(grid)
     cols_fix = int(profile_cols) if profile_cols is not None else int(np.min(grid.cols))
     rows_fix = int(np.min(grid.rows))  # OS activities are rows-invariant
     jobs = [
@@ -395,10 +411,78 @@ def measured_design_activities(
     class_a_v = np.asarray(
         [[profiles[c * n_layers + w].a_v for c in range(len(classes))] for w in range(n_layers)]
     )
-    point_class = uniq_class[inverse]
     a_h = class_a_h[:, point_class]
     a_v = class_a_v[:, point_class]
     return (a_h, a_v, stats) if return_stats else (a_h, a_v)
+
+
+def measured_design_lane_activities(
+    grid,
+    layers: Sequence[ConvLayer] = RESNET50_TABLE1,
+    *,
+    profile_cols: int | None = None,
+    backend: str | None = None,
+    use_cache: bool = True,
+    n_lanes: int = 64,
+):
+    """Measured PER-BIT-LANE activities for a whole design grid.
+
+    The lane-resolved sibling of ``measured_design_activities`` for the
+    segment-level layout engine: one ``lane_detail=True`` profile per
+    activity class per layer (lane-resolved profiling has no batch path, so
+    classes run serially through the per-GEMM engine — keep the grid's
+    class count small), expanded over the grid by the same cols/geometry
+    invariance arguments (they hold per lane: the lane decomposition
+    commutes with the tile scaling).
+
+    Returns ``(a_h, a_v, h_lanes, v_lanes)``: the (W, P) aggregates plus
+    (W, P, n_lanes) per-lane activity arrays (toggles per transition per
+    wire, zero above each point's bus width) ready for
+    ``repro.layout.power.evaluate_layout_space``.  The grid must be BI-free
+    (lane activities describe physical, uncoded buses).
+    """
+    layers = list(layers)
+    if not layers:
+        raise ValueError("no workload layers")
+    if np.any(np.asarray(grid.bus_invert)):
+        raise ValueError(
+            "lane activities describe uncoded buses; expand the space with "
+            "bus_invert=(False,)"
+        )
+    if int(np.max(grid.b_v)) > n_lanes or int(np.max(grid.b_h)) > n_lanes:
+        raise ValueError(f"bus wider than n_lanes={n_lanes}")
+    classes, point_class = _activity_classes(grid)
+    cols_fix = int(profile_cols) if profile_cols is not None else int(np.min(grid.cols))
+    rows_fix = int(np.min(grid.rows))
+    n_layers = len(layers)
+    agg_h = np.zeros((n_layers, len(classes)))
+    agg_v = np.zeros((n_layers, len(classes)))
+    lane_h = np.zeros((n_layers, len(classes), n_lanes))
+    lane_v = np.zeros((n_layers, len(classes), n_lanes))
+    for c, cls in enumerate(classes):
+        for i, layer in enumerate(layers):
+            p = profile_conv_layer(
+                layer,
+                rows=cls[1] if cls[0] == "WS" else rows_fix,
+                cols=cols_fix,
+                bits=cls[-2],
+                b_v=cls[-1],
+                seed=i,
+                dataflow=cls[0],
+                backend=backend,
+                use_cache=use_cache,
+                lane_detail=True,
+            )
+            agg_h[i, c] = p.a_h
+            agg_v[i, c] = p.a_v
+            lane_h[i, c, : p.b_h] = p.a_h_lanes
+            lane_v[i, c, : p.b_v] = p.a_v_lanes
+    return (
+        agg_h[:, point_class],
+        agg_v[:, point_class],
+        lane_h[:, point_class, :],
+        lane_v[:, point_class, :],
+    )
 
 
 def gemms_for_arch(cfg, seq_len: int, batch: int = 1) -> list[Gemm]:

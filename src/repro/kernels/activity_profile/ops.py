@@ -50,12 +50,15 @@ from repro.kernels.activity_profile.kernel import (
 
 __all__ = [
     "ToggleCounts",
+    "LaneToggleCounts",
     "INT16_SAFE_MAX",
     "MAX_FUSED_K",
     "MAX_FUSED_LANES",
     "operands_fit_fused",
     "profile_gemm_toggles",
+    "profile_gemm_lane_toggles",
     "stream_toggle_total",
+    "stream_lane_toggle_totals",
 ]
 
 INT16_SAFE_MAX = (1 << 15) - 1
@@ -91,6 +94,32 @@ class ToggleCounts:
             self.h_transitions + other.h_transitions,
             self.v_transitions + other.v_transitions,
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneToggleCounts:
+    """Exact per-bit-lane toggle totals for one GEMM.
+
+    ``h_lanes[b]`` / ``v_lanes[b]`` count the toggles of bus bit-lane ``b``
+    (LSB first) summed over every wire bundle and transition of the
+    respective direction; every lane shares the bundle's transition
+    denominator, so lane activities are ``lanes / transitions`` and the
+    lane sums reproduce the aggregate ``ToggleCounts`` bit-exactly
+    (``sum(h_lanes) == h_toggles`` etc. — regression-tested).
+    """
+
+    h_lanes: tuple[int, ...]
+    v_lanes: tuple[int, ...]
+    h_transitions: int
+    v_transitions: int
+
+    def totals(self) -> ToggleCounts:
+        return ToggleCounts(
+            sum(self.h_lanes), sum(self.v_lanes), self.h_transitions, self.v_transitions
+        )
+
+    def activities(self, b_h: int, b_v: int) -> tuple[float, float]:
+        return self.totals().activities(b_h, b_v)
 
 
 def _fits_int16(arr: np.ndarray) -> bool:
@@ -423,3 +452,273 @@ def profile_gemm_toggles(
 
     v_tog = int(np.asarray(v_parts).astype(np.int64).sum())
     return ToggleCounts(h_tog, v_tog, h_trans, v_trans)
+
+
+# ---------------------------------------------------------------------------
+# Per-bit-lane toggle totals (lane-resolved rendering of the same passes)
+# ---------------------------------------------------------------------------
+#
+# The aggregate engines popcount the XORed lo/hi planes; the lane-resolved
+# variants extract each bus bit instead and accumulate a (lanes,) vector.
+# Bus semantics match ``kernel.value32_toggles`` / ``kernel.planes_toggles``
+# exactly: for a bus wider than the 32-bit operand plane, lanes >= 32 of an
+# operand stream are sign-extension copies (they all flip with the sign
+# bit), while the WS partial-sum lanes >= 32 come from the true hi plane.
+# The lane passes always run the XLA engine (lane extraction is a reduction
+# fan-out, not a kernel-shaped inner loop); counts are bit-exact vs the
+# aggregate engines and the numpy oracle.
+
+
+def _compact_lanes(bits: int) -> int:
+    """Lanes materialized on-device: 32 value lanes + one shared sign lane."""
+    return min(bits, 32) + (1 if bits > 32 else 0)
+
+
+def _expand_sign_lanes(cnt: np.ndarray, bits: int) -> np.ndarray:
+    """(compact,) device counts -> (bits,) int64 per-lane totals."""
+    cnt = np.asarray(cnt, np.int64)
+    if bits <= 32:
+        return cnt
+    return np.concatenate([cnt[:32], np.repeat(cnt[32:33], bits - 32)])
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t"))
+def _h_lane_toggles_xla(a_pad: jnp.ndarray, *, bits: int, block_t: int) -> jnp.ndarray:
+    """Per-bit-lane horizontal toggle partials over the whole stream.
+
+    Returns (num_t_blocks, block_t, compact_lanes) int32 — reduced per time
+    ROW, so each partial is bounded by K_pad (< 2^25, caller-enforced).
+    """
+    t_pad, k_pad = a_pad.shape
+    blocks = a_pad.reshape(t_pad // block_t, block_t, k_pad)
+
+    def lane_counts(x):  # (block_t, k_pad) int32 XOR -> (block_t, compact)
+        cols_ = [((x >> jnp.int32(b)) & 1).sum(axis=1) for b in range(min(bits, 32))]
+        if bits > 32:
+            cols_.append(((x >> jnp.int32(31)) & 1).sum(axis=1))
+        return jnp.stack(cols_, axis=-1).astype(jnp.int32)
+
+    def step(prev_row, blk):
+        lag = jnp.concatenate([prev_row, blk[:-1]], axis=0)
+        return blk[-1:], lane_counts(blk ^ lag)
+
+    _, cnts = jax.lax.scan(step, blocks[0, :1], blocks)
+    return cnts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "cols", "k", "n", "b_v", "block_t", "tile_chunk"),
+)
+def _v_lane_toggles_xla(
+    a_pad: jnp.ndarray,
+    w_pad: jnp.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    k: int,
+    n: int,
+    b_v: int,
+    block_t: int,
+    tile_chunk: int,
+) -> jnp.ndarray:
+    """Per-bit-lane vertical toggle partials: lane-resolved ``_v_toggles_xla``.
+
+    Same grid, same lo/hi-plane carries; each (tile, t-block) cell reduces a
+    (b_v,) lane vector instead of a popcount scalar (every entry is bounded
+    by block_t * rows * cols < 2^31).  Returns
+    (padded_tiles // tile_chunk, tile_chunk, num_t_blocks, b_v) int32.
+    """
+    t_pad, k_pad = a_pad.shape
+    k_tiles = k_pad // rows
+    n_tiles = w_pad.shape[1] // cols
+    num_tb = t_pad // block_t
+    a_blocks = a_pad.reshape(num_tb, block_t, k_tiles, rows)
+    w_tiles = w_pad.reshape(k_tiles, rows, n_tiles, cols).transpose(0, 2, 1, 3)
+    cix = jnp.arange(cols, dtype=jnp.int32)
+    rix = jnp.arange(rows, dtype=jnp.int32)
+
+    def per_tile(p):
+        kt = p // n_tiles
+        nt = p % n_tiles
+        w_t = w_tiles[kt, nt]
+        a_t = a_blocks[:, :, kt, :]
+        valid_r = jnp.minimum(rows, k - kt * rows)
+        valid_c = jnp.minimum(cols, n - nt * cols)
+        colmask = cix < valid_c
+
+        def block_step(bcarry, a_blk):
+            bound_lo, bound_hi = bcarry
+
+            def rstep(rcarry, xs):
+                run_lo, run_hi = rcarry
+                a_col, w_row, b_lo, b_hi, r = xs
+                prod = a_col[:, None] * w_row[None, :]
+                new_lo = run_lo + prod
+                carry = (
+                    new_lo.astype(jnp.uint32) < run_lo.astype(jnp.uint32)
+                ).astype(jnp.int32)
+                new_hi = run_hi + (prod >> jnp.int32(31)) + carry
+                lag_lo = jnp.concatenate([b_lo[None], new_lo[:-1]], axis=0)
+                lag_hi = jnp.concatenate([b_hi[None], new_hi[:-1]], axis=0)
+                x_lo = new_lo ^ lag_lo
+                x_hi = new_hi ^ lag_hi
+                ok = (r < valid_r) & colmask[None, :]
+                lanes = [
+                    jnp.sum(jnp.where(ok, (x_lo >> jnp.int32(b)) & 1, 0))
+                    for b in range(min(b_v, 32))
+                ] + [
+                    jnp.sum(jnp.where(ok, (x_hi >> jnp.int32(b - 32)) & 1, 0))
+                    for b in range(32, b_v)
+                ]
+                cnt = jnp.stack(lanes).astype(jnp.int32)
+                return (new_lo, new_hi), (cnt, new_lo[-1], new_hi[-1])
+
+            zero = jnp.zeros((a_blk.shape[0], cols), jnp.int32)
+            (_, _), (cnts, nb_lo, nb_hi) = jax.lax.scan(
+                rstep, (zero, zero), (a_blk.T, w_t, bound_lo, bound_hi, rix)
+            )
+            return (nb_lo, nb_hi), jnp.sum(cnts, axis=0)
+
+        s0_lo, s0_hi = partial_sum_planes(a_t[0, :1, :], w_t)
+        (_, _), v_b = jax.lax.scan(block_step, (s0_lo[0], s0_hi[0]), a_t)
+        return v_b  # (num_tb, b_v)
+
+    num_tiles = k_tiles * n_tiles
+    padded = -(-num_tiles // tile_chunk) * tile_chunk
+    ids = jnp.where(
+        jnp.arange(padded, dtype=jnp.int32) < num_tiles,
+        jnp.arange(padded, dtype=jnp.int32),
+        0,
+    ).reshape(padded // tile_chunk, tile_chunk)
+    return jax.lax.map(jax.vmap(per_tile), ids)
+
+
+def stream_lane_toggle_totals(
+    x: np.ndarray, bits: int, *, block_t: int | None = None
+) -> np.ndarray:
+    """Per-bit-lane totals of ``stream_toggle_total``: (bits,) int64.
+
+    ``x`` is (T, L) int16-range stream lanes on a ``bits``-wide bus; entry b
+    counts the toggles of bus bit b summed over all L wires and T-1
+    transitions (``sum(result) == stream_toggle_total(x, bits)``,
+    bit-exactly).
+    """
+    x = np.asarray(x)
+    t, lanes = x.shape
+    if t < 2 or lanes == 0:
+        return np.zeros(bits, np.int64)
+    if not _fits_int16(x):
+        raise ValueError(
+            "fused engine needs int16-range stream values; "
+            "use the numpy backend for wider values"
+        )
+    if lanes >= MAX_FUSED_LANES:
+        raise ValueError("fused engine supports < 2^25 stream lanes")
+    if block_t is None:
+        block_t = min(choose_block_t(1, lanes), -(-t // 8) * 8)
+    pt = (-t) % block_t
+    x_pad = np.pad(x.astype(np.int32), ((0, pt), (0, 0)), mode="edge")
+    parts = _h_lane_toggles_xla(jnp.asarray(x_pad), bits=bits, block_t=block_t)
+    compact = np.asarray(parts).astype(np.int64).sum(axis=(0, 1))
+    return _expand_sign_lanes(compact, bits)
+
+
+def profile_gemm_lane_toggles(
+    a: np.ndarray,
+    w: np.ndarray,
+    rows: int,
+    cols: int,
+    b_h: int,
+    b_v: int,
+    *,
+    dataflow: str = "WS",
+    block_t: int | None = None,
+) -> LaneToggleCounts:
+    """Exact per-bit-lane toggle totals for GEMM ``a @ w`` on an R x C array.
+
+    The lane-resolved sibling of ``profile_gemm_toggles`` (same operand and
+    dimension contracts, same tiling semantics under both dataflows); the
+    lane sums equal the aggregate totals bit-for-bit.  Always runs the XLA
+    engine.
+    """
+    a = np.asarray(a)
+    w = np.asarray(w)
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
+    if not 1 <= b_h <= 64 or not 1 <= b_v <= 64:
+        raise ValueError("bus widths must be in [1, 64]")
+    if dataflow not in ("WS", "OS"):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    if not operands_fit_fused(a, w):
+        raise ValueError(
+            "fused engine needs int16-range operands (products must fit int32); "
+            "use the numpy backend for wider values"
+        )
+    m, k = a.shape
+    n = w.shape[1]
+
+    if dataflow == "OS":
+        if max(m, n) >= MAX_FUSED_LANES:
+            raise ValueError(
+                "fused OS engine supports M, N < 2^25; use the numpy backend"
+            )
+        from repro.core.switching import os_stream_counts
+
+        _, _, h_trans, v_trans = os_stream_counts(0, 0, m, k, n, rows, cols)
+        if k < 2 or m == 0 or n == 0:
+            return LaneToggleCounts((0,) * b_h, (0,) * b_v, h_trans, v_trans)
+        base_h = stream_lane_toggle_totals(
+            np.ascontiguousarray(a.T), b_h, block_t=block_t
+        )
+        base_v = stream_lane_toggle_totals(w, b_v, block_t=block_t)
+        n_tiles = -(-n // cols)
+        m_tiles = -(-m // rows)
+        return LaneToggleCounts(
+            tuple(int(v) for v in n_tiles * base_h),
+            tuple(int(v) for v in m_tiles * base_v),
+            h_trans,
+            v_trans,
+        )
+
+    if k + rows >= MAX_FUSED_K:
+        raise ValueError("fused engine supports K < 2^25; use the numpy backend")
+    if rows >= MAX_FUSED_ROWS:
+        raise ValueError("fused engine supports rows < 2^15; use the numpy backend")
+    k_tiles = -(-k // rows) if k else 0
+    n_tiles = -(-n // cols) if n else 0
+    h_trans = max(m - 1, 0) * k * n_tiles
+    v_trans = max(m - 1, 0) * k * n
+    if m < 2 or k == 0 or n == 0:
+        return LaneToggleCounts((0,) * b_h, (0,) * b_v, h_trans, v_trans)
+
+    if block_t is None:
+        block_t = min(choose_block_t(rows, cols), -(-m // 8) * 8)
+    a_pad, w_pad = _pad_operands(
+        a.astype(np.int32), w.astype(np.int32), rows, cols, block_t
+    )
+    h_parts = _h_lane_toggles_xla(jnp.asarray(a_pad), bits=b_h, block_t=block_t)
+    h_lanes = n_tiles * _expand_sign_lanes(
+        np.asarray(h_parts).astype(np.int64).sum(axis=(0, 1)), b_h
+    )
+    num_tiles = k_tiles * n_tiles
+    tile_chunk = int(min(16, max(1, num_tiles)))
+    v_parts = _v_lane_toggles_xla(
+        jnp.asarray(a_pad),
+        jnp.asarray(w_pad),
+        rows=rows,
+        cols=cols,
+        k=k,
+        n=n,
+        b_v=b_v,
+        block_t=block_t,
+        tile_chunk=tile_chunk,
+    )
+    v_parts = np.asarray(v_parts).reshape(-1, v_parts.shape[-2], b_v)[:num_tiles]
+    v_lanes = v_parts.astype(np.int64).sum(axis=(0, 1))
+    return LaneToggleCounts(
+        tuple(int(v) for v in h_lanes),
+        tuple(int(v) for v in v_lanes),
+        h_trans,
+        v_trans,
+    )

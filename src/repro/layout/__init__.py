@@ -1,0 +1,51 @@
+"""Segment-level physical layout engine.
+
+Where ``repro.core.floorplan`` collapses a floorplan to the paper's
+closed-form wirelength model (Eq. 1-6: one aspect scalar, aggregate
+activities), this package places every PE cell, enumerates every wire
+segment, and rolls interconnect energy up from measured per-bit-lane
+switching:
+
+  * ``geometry``  — PE cell dimensions, grid placement, envelopes, and the
+    ``LAYOUTS`` registry of floorplan families (uniform rectangle,
+    serpentine/folded, k x k multi-pod tilings with inter-pod trunk wires).
+  * ``segments``  — struct-of-arrays wire-segment enumeration (h-bus hops,
+    v-bus hops + trunks, weight-preload path, OS output-drain path, H-tree
+    clock spine) with per-segment length, bit width and lane range, plus
+    the fixed-schema segment-class coefficients the batched evaluator runs
+    on.
+  * ``power``     — per-lane x per-segment switched-capacitance roll-up
+    (consuming measured ``ActivityProfile``s), repeater-aware length
+    scaling, and the jitted batched layout-space evaluator wired into
+    ``repro.core.design_space`` as the layout-family axis.
+
+On the uniform-rectangle family the segment model reduces exactly to
+``wirelength_total_arr`` / ``bus_power_arr`` and its argmin to the
+envelope-clamped Eq. 6 optimum (tested); serpentine and multi-pod families
+express floorplans the closed form cannot.  See DESIGN.md §Layout-engine.
+"""
+
+from repro.layout.geometry import (  # noqa: F401
+    LAYOUTS,
+    MultiPodLayout,
+    SerpentineLayout,
+    UniformLayout,
+    envelope,
+    get_layout,
+    layout_feasible,
+    place_pes,
+    register_layout,
+)
+from repro.layout.segments import (  # noqa: F401
+    SegmentList,
+    enumerate_segments,
+    segment_class_coeffs,
+)
+from repro.layout.power import (  # noqa: F401
+    LayoutPowerConfig,
+    LayoutSpaceEval,
+    evaluate_layout_space,
+    rollup_segments,
+    segment_bus_power,
+    segment_wirelength,
+)

@@ -1,0 +1,518 @@
+"""Per-lane x per-segment switched-capacitance roll-up + batched evaluator.
+
+Power model
+-----------
+Each wire segment of length L carrying an ``act_bits`` expected number of
+switching wires per cycle dissipates
+
+    P_seg = 0.5 * c_wire * L * rep(L) * act_bits * Vdd^2 * f
+
+``rep(L) = 1 + repeater_overhead * max(0, L / repeater_spacing - 1)`` is a
+simple repeater-aware length scaling: hops shorter than the repeater
+spacing (every hop of every family at realistic PE areas) are plain wire,
+longer runs (serpentine turnarounds, inter-pod trunks) pay the inserted
+repeaters' input capacitance pro-rata.  The clock spine is exempt — clock
+trees are explicitly buffered and their buffer power already lives in the
+calibrated non-bus fraction of ``repro.core.energy``.
+
+``act_bits`` is where measured per-bit-lane switching enters: a segment
+carrying lanes [lane0, lane0+width) of a profiled bus switches
+``sum(lane_activity[lane0 : lane0+width])`` wires per transition.  With
+only aggregate activities the roll-up falls back to ``a * width`` — the
+MEAN-LANE approximation, exact whenever every segment carries the full bus
+(the closed-form ``bus_switched_capacitance_arr`` is precisely this case)
+and an approximation the moment widths vary per segment (WS multi-pod
+interior buses carry only the low pod-accumulator lanes;
+``benchmarks/bench_design_space.py``'s ``layout/lane_approx_error`` row
+quantifies the gap).  Fidelity caveat: the lane distribution is measured
+on the FULL R-deep partial-sum stream; a pod-local bus physically carries
+the (R/k)-deep sub-accumulation, whose low lanes toggle similarly but
+whose boundary resets the measured stream does not model — the per-lane
+roll-up is a better estimate than mean-lane for truncated buses, not
+cycle-accurate ground truth.
+
+Closed-form equivalence contract
+--------------------------------
+With the default config (no envelope limit, duty-cycled overhead nets off)
+the uniform family's data-net power equals ``floorplan.bus_power_arr``
+exactly and its argmin aspect the envelope-clamped Eq. 6 optimum — the
+closed form is a verified special case of the segment model (tested, and
+asserted every CI run by ``benchmarks/bench_layout.py``).
+
+Batched evaluation
+------------------
+``evaluate_layout_space`` broadcasts every registered family's fixed-schema
+segment classes over a ``DesignGrid``, then runs ONE jitted program per
+call: per-(workload, layout, point) golden-section optimal aspects inside
+the intersection of the PE-aspect envelope and the die-envelope constraint
+(``max_envelope_aspect`` — the physical reason folded/podded families beat
+the uniform rectangle: they realize extreme PE aspects inside a bounded
+die), workload-weighted robust aspects, data-net powers, overhead powers
+and wirelengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.design_space import DesignGrid, _norm_activities
+from repro.core.floorplan import _xp, golden_section_minimize_arr
+from repro.layout.geometry import envelope_coeffs, get_layout
+from repro.layout.segments import (
+    DATA_NETS,
+    SEGMENT_CLASS_SCHEMA,
+    SegmentList,
+    enumerate_segments,
+    segment_class_coeffs,
+)
+
+try:  # jax accelerates the evaluator; same code runs in float64 numpy without it
+    import jax
+
+    _HAS_JAX = True
+except ImportError:  # pragma: no cover - jax baked into the image
+    _HAS_JAX = False
+
+__all__ = [
+    "LayoutPowerConfig",
+    "LayoutSpaceEval",
+    "rollup_segments",
+    "segment_bus_power",
+    "segment_wirelength",
+    "evaluate_layout_space",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutPowerConfig:
+    """Knobs of the segment power model (defaults = closed-form-equivalent).
+
+    ``preload_duty``/``drain_duty`` default to 0: the steady-state bus model
+    neglects weight preload and output drain exactly as the paper does
+    (turn them on to price those chains as duty-cycled overhead nets).
+    ``max_envelope_aspect`` bounds the ARRAY bounding box W/H (a die-fitting
+    constraint, distinct from the per-PE envelope); ``None`` = unbounded.
+    """
+
+    vdd: float = 0.9
+    freq_hz: float = 1.0e9
+    wire_cap_f_per_um: float = 0.20e-15
+    repeater_spacing_um: float = 200.0
+    repeater_overhead: float = 0.3
+    max_envelope_aspect: float | None = None
+    preload_duty: float = 0.0
+    preload_activity: float = 0.5
+    drain_duty: float = 0.0
+    drain_activity: float = 0.5
+    clock_toggles_per_cycle: float = 2.0
+
+
+def _repeater_scale(length, spacing, overhead, xp=np):
+    return 1.0 + overhead * xp.maximum(length / spacing - 1.0, 0.0)
+
+
+def _lane_sum(lanes: np.ndarray | None, lane0, width, agg, _unused=None):
+    """Expected switching wires per transition for lanes [lane0, lane0+width).
+
+    ``lanes`` is a per-lane activity array with the lane axis last — (n,)
+    for one profile, (W, P, n) for a grid — or None for the aggregate
+    mean-lane path (``agg * width``).  ``lane0``/``width`` broadcast over
+    the non-lane axes.
+    """
+    width = np.asarray(width)
+    if lanes is None:
+        return np.asarray(agg) * width
+    lanes = np.asarray(lanes, float)
+    cs = np.concatenate(
+        [np.zeros(lanes.shape[:-1] + (1,)), np.cumsum(lanes, axis=-1)], axis=-1
+    )
+    n = lanes.shape[-1]
+    lo = np.clip(np.asarray(lane0, np.int64), 0, n)
+    hi = np.clip(lo + np.asarray(width, np.int64), 0, n)
+    if lanes.ndim == 1:
+        return cs[hi] - cs[lo]
+    tgt = cs.shape[:-1]
+    lo_b = np.broadcast_to(lo, tgt)[..., None]
+    hi_b = np.broadcast_to(hi, tgt)[..., None]
+    return (
+        np.take_along_axis(cs, hi_b, axis=-1) - np.take_along_axis(cs, lo_b, axis=-1)
+    )[..., 0]
+
+
+def _segment_act_bits(
+    net: np.ndarray,
+    width: np.ndarray,
+    lane0: np.ndarray,
+    a_h: float,
+    a_v: float,
+    cfg: LayoutPowerConfig,
+    h_lanes: np.ndarray | None,
+    v_lanes: np.ndarray | None,
+) -> np.ndarray:
+    act = np.zeros(width.shape, float)
+    for m, lanes, agg in (("h", h_lanes, a_h), ("v", v_lanes, a_v)):
+        sel = net == m
+        if sel.any():
+            act[sel] = _lane_sum(lanes, lane0[sel], width[sel], agg, None)
+    act[net == "preload"] = (
+        cfg.preload_duty * cfg.preload_activity * width[net == "preload"]
+    )
+    act[net == "drain"] = cfg.drain_duty * cfg.drain_activity * width[net == "drain"]
+    act[net == "clk"] = cfg.clock_toggles_per_cycle * width[net == "clk"]
+    return act
+
+
+def rollup_segments(
+    segs: SegmentList,
+    a_h: float,
+    a_v: float,
+    *,
+    h_lanes: np.ndarray | None = None,
+    v_lanes: np.ndarray | None = None,
+    cfg: LayoutPowerConfig = LayoutPowerConfig(),
+) -> dict[str, float]:
+    """Explicit per-segment power roll-up [W], by net.
+
+    ``h_lanes``/``v_lanes`` are optional per-lane activity arrays (e.g.
+    ``ActivityProfile.a_h_lanes``); without them each net uses its aggregate
+    activity (the mean-lane approximation).  Returns per-net watts plus
+    ``bus_w`` (the data nets — comparable to ``floorplan.bus_power``),
+    ``overhead_w`` and ``total_w``.
+    """
+    act = _segment_act_bits(
+        segs.net, segs.width.astype(float), segs.lane0, a_h, a_v, cfg, h_lanes, v_lanes
+    )
+    rep = _repeater_scale(
+        segs.length, cfg.repeater_spacing_um, cfg.repeater_overhead, np
+    )
+    rep = np.where(segs.net == "clk", 1.0, rep)
+    p_seg = (
+        0.5 * cfg.wire_cap_f_per_um * segs.length * rep * act * cfg.vdd**2 * cfg.freq_hz
+    )
+    out = {net: float(p_seg[segs.net == net].sum()) for net in np.unique(segs.net)}
+    bus = sum(out.get(n, 0.0) for n in DATA_NETS)
+    overhead = sum(v for k, v in out.items() if k not in DATA_NETS)
+    out["bus_w"] = bus
+    out["overhead_w"] = overhead
+    out["total_w"] = bus + overhead
+    return out
+
+
+def segment_bus_power(
+    layout,
+    geom,
+    act,
+    aspect: float,
+    *,
+    dataflow: str = "WS",
+    h_lanes: np.ndarray | None = None,
+    v_lanes: np.ndarray | None = None,
+    cfg: LayoutPowerConfig = LayoutPowerConfig(),
+) -> float:
+    """Data-net (h+v) power [W] of ``layout`` at one aspect — the explicit
+    segment model's answer to ``floorplan.bus_power`` (equal on uniform)."""
+    segs = enumerate_segments(
+        layout,
+        geom.rows,
+        geom.cols,
+        geom.b_h,
+        geom.b_v,
+        geom.pe_area_um2,
+        aspect,
+        dataflow=dataflow,
+        nets=DATA_NETS,
+    )
+    return rollup_segments(
+        segs, act.a_h, act.a_v, h_lanes=h_lanes, v_lanes=v_lanes, cfg=cfg
+    )["bus_w"]
+
+
+def segment_wirelength(layout, geom, aspect: float, *, dataflow: str = "WS") -> float:
+    """Total data-net wire length [um] — Eq. 3's unit (equal on uniform)."""
+    segs = enumerate_segments(
+        layout,
+        geom.rows,
+        geom.cols,
+        geom.b_h,
+        geom.b_v,
+        geom.pe_area_um2,
+        aspect,
+        dataflow=dataflow,
+        nets=DATA_NETS,
+    )
+    return segs.wire_length()
+
+
+# ---------------------------------------------------------------------------
+# Batched (design point x layout family) evaluator
+# ---------------------------------------------------------------------------
+
+
+def _layout_eval_core(
+    count,  # (L, C, P)
+    len_w,
+    len_h,
+    len_c,
+    width,
+    act_data,  # (W, L, C, P) switching wires per transition, data classes only
+    act_over,  # (L, C, P) overhead classes only
+    rep_exempt,  # (L, C, P) 1.0 where repeater scaling is exempt (clk)
+    data_mask,  # (L, C, P) 1.0 on data-net (h/v) classes
+    pe_area,  # (P,)
+    log_lo,  # (L, P)
+    log_hi,
+    weights,  # (W,)
+    vdd,
+    freq_hz,
+    wire_cap,
+    spacing,
+    overhead,
+    *,
+    gss_iters: int,
+):
+    xp = _xp(count, act_data)
+    pref = 0.5 * wire_cap * vdd * vdd * freq_hz
+
+    def caps(log_r, act):
+        # log_r: (..., L, P) -> per-class lengths at that aspect
+        r = xp.exp(log_r)
+        w_pe = xp.sqrt(pe_area * r)
+        h_pe = xp.sqrt(pe_area / r)
+        ln = len_w * w_pe[..., None, :] + len_h * h_pe[..., None, :] + len_c
+        rep = 1.0 + (1.0 - rep_exempt) * overhead * xp.maximum(ln / spacing - 1.0, 0.0)
+        return xp.sum(count * ln * rep * act, axis=-2)  # reduce the class axis
+
+    # Per-(workload, layout, point) optimum of the data-net power.
+    lo_w = log_lo[None] + 0.0 * act_data[:, :, 0]  # (W, L, P)
+    hi_w = log_hi[None]
+    log_opt = golden_section_minimize_arr(
+        lambda lr: caps(lr, act_data), lo_w, hi_w, iters=gss_iters, xp=xp
+    )
+    aspect_opt = xp.exp(log_opt)
+    bus_power_opt = pref * caps(log_opt, act_data)
+
+    # Robust (workload-weighted) aspect per (layout, point).
+    w_col = weights[:, None, None]
+
+    def weighted(log_r):
+        return xp.sum(w_col * caps(log_r[None], act_data), axis=0)
+
+    log_rob = golden_section_minimize_arr(
+        weighted, log_lo, log_hi, iters=gss_iters, xp=xp
+    )
+    aspect_robust = xp.exp(log_rob)
+    bus_power_robust = pref * weighted(log_rob)
+    overhead_w = pref * caps(log_rob, act_over)
+
+    # Data-net wirelength (um of wire) at the robust aspect.
+    r = xp.exp(log_rob)
+    w_pe = xp.sqrt(pe_area * r)
+    h_pe = xp.sqrt(pe_area / r)
+    ln = len_w * w_pe[..., None, :] + len_h * h_pe[..., None, :] + len_c
+    wirelength = xp.sum(data_mask * count * ln * width, axis=-2)
+
+    return {
+        "aspect_opt": aspect_opt,
+        "bus_power_opt": bus_power_opt,
+        "aspect_robust": aspect_robust,
+        "bus_power_robust": bus_power_robust,
+        "overhead_w": overhead_w,
+        "wirelength_um": wirelength,
+    }
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_layout_eval(gss_iters: int):
+    return jax.jit(functools.partial(_layout_eval_core, gss_iters=gss_iters))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpaceEval:
+    """(layout L, point P) evaluation of a design grid across families.
+
+    Workload-axis outputs are (W, L, P); per-(layout, point) outputs (L, P).
+    Infeasible (layout, point) pairs — family/grid divisibility or an empty
+    aspect window under ``max_envelope_aspect`` — carry ``inf`` powers.
+    """
+
+    grid: DesignGrid
+    layouts: tuple[str, ...]
+    feasible: np.ndarray  # (L, P) bool
+    aspect_lo: np.ndarray  # (L, P) effective lower aspect bound
+    aspect_hi: np.ndarray  # (L, P)
+    aspect_opt: np.ndarray  # (W, L, P)
+    bus_power_opt: np.ndarray  # (W, L, P) data-net power at aspect_opt [W]
+    aspect_robust: np.ndarray  # (L, P)
+    bus_power_robust: np.ndarray  # (L, P) workload-weighted at aspect_robust
+    overhead_w: np.ndarray  # (L, P) clk (+duty-cycled preload/drain)
+    wirelength_um: np.ndarray  # (L, P) data-net wire length at aspect_robust
+
+    @property
+    def n_points(self) -> int:
+        return self.grid.n_points
+
+    @property
+    def total_w(self) -> np.ndarray:
+        return self.bus_power_robust + self.overhead_w
+
+    @property
+    def best_layout(self) -> np.ndarray:
+        """(P,) index into ``layouts`` minimizing robust bus + overhead."""
+        return np.argmin(self.total_w, axis=0)
+
+    def best_layout_name(self, i: int) -> str:
+        return self.layouts[int(self.best_layout[i])]
+
+
+def evaluate_layout_space(
+    grid: DesignGrid,
+    a_h,
+    a_v,
+    *,
+    layouts: Sequence[str] = ("uniform", "serpentine2", "pods2x2"),
+    h_lanes: np.ndarray | None = None,
+    v_lanes: np.ndarray | None = None,
+    weights: Sequence[float] | None = None,
+    cfg: LayoutPowerConfig = LayoutPowerConfig(),
+    use_jit: bool | None = None,
+    gss_iters: int = 64,
+) -> LayoutSpaceEval:
+    """Evaluate every (design point, layout family) pair in one program.
+
+    ``a_h``/``a_v`` are (W, P)-broadcastable aggregate activities (measured:
+    ``workloads.measured_design_activities``); ``h_lanes``/``v_lanes`` are
+    optional (W, P, n_lanes) per-lane activity arrays (measured:
+    ``workloads.measured_design_lane_activities``) — with them, variable-
+    width segments (multi-pod pod buses) are priced from the true lane
+    distribution instead of the mean-lane approximation.  The grid must be
+    bus-invert-free (BI is an activity transform on a coded bus; the
+    segment model prices physical lanes).
+    """
+    if np.any(np.asarray(grid.bus_invert)):
+        raise ValueError(
+            "layout engine prices physical (uncoded) buses; expand the space "
+            "with bus_invert=(False,)"
+        )
+    p = grid.n_points
+    a_h, a_v = _norm_activities(a_h, a_v, p)
+    n_w = a_h.shape[0]
+    w = np.asarray(weights if weights is not None else np.ones(n_w), float)
+    if w.shape != (n_w,):
+        raise ValueError("weights must match the workload axis")
+    if w.sum() <= 0:
+        raise ValueError("weights must sum to a positive value")
+    w = w / w.sum()
+    for lanes, name in ((h_lanes, "h_lanes"), (v_lanes, "v_lanes")):
+        if lanes is not None and (lanes.ndim != 3 or lanes.shape[:2] != (n_w, p)):
+            raise ValueError(f"{name} must be (workloads, points, n_lanes)")
+
+    layout_names = tuple(layouts)
+    rows = np.asarray(grid.rows, float)
+    cols = np.asarray(grid.cols, float)
+    b_h = np.asarray(grid.b_h, float)
+    b_v = np.asarray(grid.b_v, float)
+    os_mask = np.asarray(grid.dataflow_os, bool)
+    n_cls = len(SEGMENT_CLASS_SCHEMA)
+    nets = np.asarray([net for net, _ in SEGMENT_CLASS_SCHEMA])
+    n_l = len(layout_names)
+
+    count = np.zeros((n_l, n_cls, p))
+    len_w_ = np.zeros_like(count)
+    len_h_ = np.zeros_like(count)
+    len_c_ = np.zeros_like(count)
+    width = np.zeros_like(count)
+    rep_exempt = np.zeros_like(count)
+    data_mask = np.zeros_like(count)
+    act_data = np.zeros((n_w, n_l, n_cls, p))
+    act_over = np.zeros((n_l, n_cls, p))
+    feasible = np.zeros((n_l, p), bool)
+    lo = np.zeros((n_l, p))
+    hi = np.zeros((n_l, p))
+
+    for li, name in enumerate(layout_names):
+        layout = get_layout(name)
+        cc = segment_class_coeffs(layout, rows, cols, b_h, b_v, os_mask)
+        count[li] = cc["count"]
+        len_w_[li] = cc["len_w"]
+        len_h_[li] = cc["len_h"]
+        len_c_[li] = cc["len_c"]
+        width[li] = cc["width"]
+        rep_exempt[li] = (nets == "clk")[:, None].astype(float)
+        data_mask[li] = np.isin(nets, DATA_NETS)[:, None].astype(float)
+        for ci, (net, _) in enumerate(SEGMENT_CLASS_SCHEMA):
+            wdt = cc["width"][ci]
+            ln0 = cc["lane0"][ci]
+            if net == "h":
+                act_data[:, li, ci] = _lane_sum(h_lanes, ln0, wdt, a_h, None)
+            elif net == "v":
+                act_data[:, li, ci] = _lane_sum(v_lanes, ln0, wdt, a_v, None)
+            elif net == "preload":
+                act_over[li, ci] = cfg.preload_duty * cfg.preload_activity * wdt
+            elif net == "drain":
+                act_over[li, ci] = cfg.drain_duty * cfg.drain_activity * wdt
+            else:  # clk
+                act_over[li, ci] = cfg.clock_toggles_per_cycle * wdt
+
+        # Aspect window: PE envelope intersected with the die-envelope
+        # constraint (gutter constants neglected in the bound — they are
+        # small against the array span and only loosen it marginally).
+        ew_w, _, eh_h, _ = envelope_coeffs(layout, rows, cols)
+        l_lo = np.full(p, float(grid.aspect_lo))
+        l_hi = np.full(p, float(grid.aspect_hi))
+        if cfg.max_envelope_aspect is not None:
+            e = float(cfg.max_envelope_aspect)
+            if e < 1.0:
+                raise ValueError("max_envelope_aspect must be >= 1")
+            ratio = ew_w / eh_h
+            l_lo = np.maximum(l_lo, 1.0 / (e * ratio))
+            l_hi = np.minimum(l_hi, e / ratio)
+        ok = np.asarray(cc["feasible"], bool) & (l_lo < l_hi)
+        feasible[li] = ok
+        lo[li] = np.where(ok, l_lo, 1.0)
+        hi[li] = np.where(ok, l_hi, 1.0 + 1e-9)
+
+    use_jit = _HAS_JAX if use_jit is None else use_jit
+    if use_jit and not _HAS_JAX:
+        raise RuntimeError("use_jit=True but jax is not importable")
+    fn = (
+        _jitted_layout_eval(gss_iters)
+        if use_jit
+        else functools.partial(_layout_eval_core, gss_iters=gss_iters)
+    )
+    out = fn(
+        count,
+        len_w_,
+        len_h_,
+        len_c_,
+        width,
+        act_data,
+        act_over,
+        rep_exempt,
+        data_mask,
+        np.asarray(grid.pe_area_um2, float),
+        np.log(lo),
+        np.log(hi),
+        w,
+        cfg.vdd,
+        cfg.freq_hz,
+        cfg.wire_cap_f_per_um,
+        cfg.repeater_spacing_um,
+        cfg.repeater_overhead,
+    )
+    out = {k: np.asarray(v, float) for k, v in out.items()}
+    bad = ~feasible
+    for key in ("bus_power_robust", "overhead_w", "wirelength_um"):
+        out[key] = np.where(bad, np.inf, out[key])
+    out["bus_power_opt"] = np.where(bad[None], np.inf, out["bus_power_opt"])
+    return LayoutSpaceEval(
+        grid=grid,
+        layouts=layout_names,
+        feasible=feasible,
+        aspect_lo=lo,
+        aspect_hi=hi,
+        **out,
+    )

@@ -235,3 +235,107 @@ def test_deprecated_ws_aliases_warn_and_forward():
             [ProfileJob(rows=8, cols=4, b_h=16, b_v=37, a=a, w=w)], use_cache=False
         )
     assert (old_batch.a_h, old_batch.a_v) == (old.a_h, old.a_v)
+
+
+# ---------------------------------------------------------------------------
+# Per-bit-lane toggle totals (lane_detail=True)
+# ---------------------------------------------------------------------------
+
+
+def _rand_gemm(seed=0, m=23, k=21, n=13):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-60, 200, (m, k)).astype(np.int64)
+    a[a < 0] = 0
+    w = rng.integers(-70, 70, (k, n)).astype(np.int64)
+    return a, w
+
+
+@pytest.mark.parametrize("dataflow,b_v", [("WS", 37), ("OS", 16)])
+def test_lane_detail_backends_bit_exact_and_sum_to_aggregate(dataflow, b_v):
+    """Numpy lane oracle == fused lane pass, and lane sums reproduce the
+    aggregate toggle counts bit-for-bit (the satellite's regression)."""
+    a, w = _rand_gemm()
+    kw = dict(dataflow=dataflow, lane_detail=True, use_cache=False)
+    p_np = profile_gemm(a, w, 8, 4, 16, b_v, backend="numpy", **kw)
+    p_fx = profile_gemm(a, w, 8, 4, 16, b_v, backend="pallas", **kw)
+    assert p_np.h_lane_toggles == p_fx.h_lane_toggles
+    assert p_np.v_lane_toggles == p_fx.v_lane_toggles
+    assert len(p_fx.h_lane_toggles) == 16
+    assert len(p_fx.v_lane_toggles) == b_v
+    # aggregate profile (no lanes) agrees bit-exactly with the lane sums
+    agg = profile_gemm(a, w, 8, 4, 16, b_v, dataflow=dataflow, use_cache=False)
+    assert sum(p_fx.h_lane_toggles) == round(agg.a_h * agg.h_transitions * 16)
+    assert sum(p_fx.v_lane_toggles) == round(agg.a_v * agg.v_transitions * b_v)
+    assert p_fx.h_transitions == agg.h_transitions
+    assert p_fx.v_transitions == agg.v_transitions
+    assert p_fx.a_h == pytest.approx(agg.a_h, abs=1e-15)
+    assert p_fx.a_v == pytest.approx(agg.a_v, abs=1e-15)
+    # per-lane activity arrays average back to the aggregates
+    np.testing.assert_allclose(p_fx.a_h_lanes.mean(), p_fx.a_h)
+    np.testing.assert_allclose(p_fx.a_v_lanes.mean(), p_fx.a_v)
+
+
+def test_lane_detail_sign_extension_lanes():
+    """Bus lanes above bit 31 of an operand stream are sign-extension copies:
+    they all carry the sign-flip count (WS h bus widened past 32)."""
+    a, w = _rand_gemm(seed=3, m=17, k=9, n=5)
+    a[::2] -= 90  # force sign flips on the h stream
+    p = profile_gemm(a, w, 4, 4, 40, 48, lane_detail=True, use_cache=False,
+                     backend="numpy")
+    lanes = np.asarray(p.h_lane_toggles)
+    assert (lanes[32:] == lanes[32]).all()
+    p_fx = profile_gemm(a, w, 4, 4, 40, 48, lane_detail=True, use_cache=False,
+                        backend="pallas")
+    assert p.h_lane_toggles == p_fx.h_lane_toggles
+    assert p.v_lane_toggles == p_fx.v_lane_toggles
+
+
+def test_lane_detail_rejects_subsampling():
+    a, w = _rand_gemm()
+    with pytest.raises(ValueError, match="lane_detail requires exact"):
+        profile_gemm(a, w, 8, 4, 16, 37, max_tiles=1, lane_detail=True)
+
+
+def test_lane_detail_cache_key_v4_no_alias():
+    """Lane-detailed and aggregate profiles of identical operands never share
+    a cache entry (the v4 key bump), and lane profiles do cache."""
+    a, w = _rand_gemm(seed=5)
+    clear_profile_cache()
+    p_agg = profile_gemm(a, w, 8, 4, 16, 37)
+    p_lane = profile_gemm(a, w, 8, 4, 16, 37, lane_detail=True)
+    info = profile_cache_info()
+    assert info["misses"] == 2 and info["hits"] == 0
+    assert p_agg.h_lane_toggles is None and p_lane.h_lane_toggles is not None
+    assert profile_gemm(a, w, 8, 4, 16, 37, lane_detail=True) == p_lane
+    assert profile_cache_info()["hits"] == 1
+    # and the raw keys differ
+    k_agg = _cache_key(a, w, 8, 4, 16, 37, ("pallas", "WS", "exact"))
+    k_lane = _cache_key(a, w, 8, 4, 16, 37, ("pallas", "WS", "exact", "lanes"))
+    assert k_agg != k_lane
+
+
+def test_combine_profiles_sums_lane_counts():
+    a, w = _rand_gemm(seed=7)
+    a2, w2 = _rand_gemm(seed=8, m=19)
+    p1 = profile_gemm(a, w, 8, 4, 16, 37, lane_detail=True, use_cache=False)
+    p2 = profile_gemm(a2, w2, 8, 4, 16, 37, lane_detail=True, use_cache=False)
+    comb = combine_profiles([p1, p2])
+    assert comb.h_lane_toggles == tuple(
+        x + y for x, y in zip(p1.h_lane_toggles, p2.h_lane_toggles)
+    )
+    assert comb.v_lane_toggles == tuple(
+        x + y for x, y in zip(p1.v_lane_toggles, p2.v_lane_toggles)
+    )
+    # mixing lane-detailed and aggregate profiles drops the lanes
+    p3 = profile_gemm(a, w, 8, 4, 16, 37, use_cache=False)
+    assert combine_profiles([p1, p3]).h_lane_toggles is None
+
+
+def test_stream_lane_toggles_sum_matches_rate():
+    rng = np.random.default_rng(11)
+    s = rng.integers(-300, 300, (29, 7))
+    from repro.core.switching import stream_lane_toggles
+
+    lanes = stream_lane_toggles(s, 12)
+    want = stream_toggle_rate(s, 12) * 12 * (29 - 1) * 7
+    assert lanes.sum() == round(want)
