@@ -1,0 +1,195 @@
+"""Chaos benchmark: the full network-profiling workload under fault injection.
+
+Reuses the Table I + qwen15_4b (WS + OS) job set of
+``bench_network_profile`` and runs it with every injector class armed:
+
+  * ``bitflip``     — every on-disk store read is corrupted (the store was
+                      pre-seeded by a clean pass), driving the quarantine +
+                      recompute path for the whole workload;
+  * ``backend``     — the first WS bucket's fused dispatch fails, driving
+                      the per-job degradation ladder;
+  * ``device_loss`` — the second WS bucket's shard loses its device (a
+                      single-device host has no survivor, so the ladder
+                      takes over);
+  * ``hang``        — a separate mini-batch hangs past ``timeout_s``,
+                      driving the dispatch-timeout path.
+
+The module fails loudly unless (a) ``on_error="degrade"`` completes EVERY
+job, (b) every recovered profile is bit-exact against the clean pass (and
+against the numpy counts oracle: the whole workload in full mode, one job
+per geometry in smoke), and (c) every fired injector maps to a
+``failure_report`` record with the right typed cause — backend ->
+backend-compile, hang -> timeout, device_loss -> device-loss, bitflip ->
+cache-corruption.  Chaos must cost recovery work, never correctness.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_network_profile import _counts, _jobs, _oracle_check
+from repro.core.pipeline import ProfileJob, run_profile_batch
+from repro.core.switching import (
+    clear_profile_cache,
+    configure_profile_store,
+    profile_store,
+)
+from repro.runtime import faults
+
+# fired injector kind -> failure_report taxonomy kind
+KIND_MAP = {
+    "backend": "backend-compile",
+    "hang": "timeout",
+    "device_loss": "device-loss",
+    "bitflip": "cache-corruption",
+}
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise RuntimeError(f"bench_resilience: {msg}")
+
+
+def run(smoke: bool = False) -> list[dict]:
+    jobs = _jobs(smoke)
+    rows = []
+    prev_store = profile_store()  # restored below (with its stats intact)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = configure_profile_store(tmp)
+        try:
+            # Clean pass: ground truth + pre-seeded store + warm compiles.
+            clear_profile_cache()
+            baseline, _ = run_profile_batch(jobs, use_cache=True)
+            n_entries = store.info()["entries"]
+            _check(n_entries > 0, "clean pass persisted nothing")
+            clear_profile_cache()  # force the next pass through the store
+
+            # Chaos pass: store reads corrupted, two buckets' dispatch dead.
+            specs = [
+                faults.FaultSpec("bitflip", match="store-read"),
+                faults.FaultSpec("backend", match="b0s0"),
+                faults.FaultSpec("device_loss", match="b1s0"),
+            ]
+            t0 = time.perf_counter()
+            with faults.injected(specs, seed=20260807) as inj:
+                profiles, stats = run_profile_batch(
+                    _jobs(smoke), use_cache=True, on_error="degrade"
+                )
+            chaos_s = time.perf_counter() - t0
+
+            _check(
+                all(p is not None for p in profiles),
+                f"{sum(p is None for p in profiles)} jobs skipped under degrade",
+            )
+            for job, base, got in zip(jobs, baseline, profiles):
+                _check(
+                    _counts(base) == _counts(got),
+                    f"recovered profile not bit-exact on {job.name} "
+                    f"({job.dataflow}): {_counts(got)} vs {_counts(base)}",
+                )
+            # ground truth against the numpy counts oracle
+            _oracle_check(
+                jobs,
+                profiles,
+                [0, len(jobs) // 2, len(jobs) - 1] if smoke else range(len(jobs)),
+            )
+
+            rep = stats.failure_report
+            fired = inj.fired_kinds()
+            _check(
+                fired == {"bitflip", "backend", "device_loss"},
+                f"chaos pass fired {sorted(fired)}, expected all three specs",
+            )
+            for kind in fired:
+                _check(
+                    rep.counts().get(KIND_MAP[kind], 0) > 0,
+                    f"no {KIND_MAP[kind]!r} record for fired {kind!r} faults",
+                )
+            n_flips = sum(1 for f in inj.fired if f.kind == "bitflip")
+            _check(
+                rep.actions().get("quarantined:recomputed", 0) == n_flips,
+                f"{n_flips} bitflips but "
+                f"{rep.actions().get('quarantined:recomputed', 0)} quarantines",
+            )
+            _check(
+                stats.degraded > 0 and stats.skipped == 0,
+                f"expected ladder recoveries, got degraded={stats.degraded} "
+                f"skipped={stats.skipped}",
+            )
+            _check(
+                stats.store_hits == 0,
+                "corrupted store reads must never count as hits",
+            )
+            # the recomputes healed every quarantined key
+            _check(
+                store.info()["entries"] == n_entries,
+                "recomputed profiles were not written back to the store",
+            )
+            rows.append(
+                {
+                    "name": "resilience/chaos_degrade"
+                    + ("_smoke" if smoke else ""),
+                    "us_per_call": round(chaos_s * 1e6 / len(jobs), 1),
+                    "dataflow": "WS+OS",
+                    "derived": (
+                        f"jobs={len(jobs)} degraded={stats.degraded} "
+                        f"quarantined={n_flips} "
+                        f"report=[{rep.summary()}] bit_exact=True"
+                    ),
+                }
+            )
+        finally:
+            configure_profile_store(prev_store)
+            clear_profile_cache()
+
+    # Timeout path: a hung dispatch must trip timeout_s, then recover
+    # bit-exactly down the ladder (no survivor device to resubmit to).
+    rng = np.random.default_rng(0)
+    a = rng.integers(-500, 500, size=(40, 24))
+    w = rng.integers(-500, 500, size=(24, 16))
+    job = ProfileJob(rows=8, cols=8, b_h=16, b_v=37, a=a, w=w, name="hangjob")
+    t0 = time.perf_counter()
+    with faults.injected(
+        [faults.FaultSpec("hang", match="bucket-exec")],
+        hang_s=1.5 if smoke else 2.5,
+    ) as inj:
+        (p,), tstats = run_profile_batch(
+            [job],
+            use_cache=False,
+            on_error="degrade",
+            timeout_s=0.5 if smoke else 0.75,
+        )
+    hang_s = time.perf_counter() - t0
+    _check(inj.fired_kinds() == {"hang"}, "hang fault did not fire")
+    _check(p is not None, "hung job was not recovered")
+    from repro.kernels.activity_profile.ref import profile_gemm_toggles_ref
+
+    _check(
+        _counts(p) == profile_gemm_toggles_ref(a, w, 8, 8, 16, 37),
+        "timeout-recovered profile not bit-exact vs oracle",
+    )
+    _check(
+        tstats.failure_report.counts().get("timeout", 0) > 0,
+        "no timeout record for a hung dispatch",
+    )
+    rows.append(
+        {
+            "name": "resilience/timeout_ladder" + ("_smoke" if smoke else ""),
+            "us_per_call": round(hang_s * 1e6, 1),
+            "dataflow": "WS",
+            "derived": (
+                f"timeout_s={0.5 if smoke else 0.75} "
+                f"report=[{tstats.failure_report.summary()}] bit_exact=True"
+            ),
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run("--smoke" in sys.argv):
+        print(r)

@@ -20,6 +20,7 @@ import argparse
 import inspect
 import json
 import sys
+import time
 import traceback
 
 from benchmarks import (
@@ -31,6 +32,7 @@ from benchmarks import (
     bench_layout,
     bench_mxu_scale,
     bench_network_profile,
+    bench_resilience,
     bench_table1_layers,
 )
 
@@ -44,6 +46,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("activity_profile", bench_activity_profile),
     ("network_profile", bench_network_profile),
+    ("resilience", bench_resilience),
 ]
 
 
@@ -59,6 +62,7 @@ def main(argv: list[str] | None = None) -> None:
 
     print("name,us_per_call,derived")
     failed = False
+    t_run = time.perf_counter()
     report: dict = {"smoke": args.smoke, "modules": {}, "rows": []}
     for name, mod in MODULES:
         try:
@@ -84,6 +88,14 @@ def main(argv: list[str] | None = None) -> None:
             print(f"{name},ERROR,{err}")
             report["modules"][name] = f"ERROR: {err}"
     report["failed"] = failed
+    report["wall_s"] = round(time.perf_counter() - t_run, 3)
+    # Persistent-store accounting: with $REPRO_PROFILE_STORE set, a warm
+    # run's JSON proves it skipped re-profiling (store hits > 0, zero
+    # integrity failures) — the CI cold->warm job asserts exactly this.
+    from repro.core.switching import profile_cache_info, profile_store_info
+
+    report["profile_cache"] = profile_cache_info()
+    report["profile_store"] = profile_store_info()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)

@@ -39,11 +39,41 @@ Counts are bit-exact vs per-job ``profile_gemm`` (and the numpy oracle);
 jobs the fused engine cannot take (operands beyond int16 range, degenerate
 shapes, K/rows beyond the engine bounds, or an explicit numpy backend) fall
 back to the serial path per job and are reported in ``BatchStats``.
+
+Resilience
+----------
+Partial failure is a first-class outcome, not an abort.  Every failure is
+classified into the typed taxonomy of ``repro.runtime.resilience`` and the
+``on_error`` knob picks the policy:
+
+  * ``"raise"``   (default) — fail fast with a TYPED error;
+  * ``"degrade"`` — recover each affected job individually down the backend
+    ladder (pallas kernel → XLA rendering → numpy oracle; every rung
+    computes identical integer counts, so degradation is bit-exact), with
+    per-rung retry + deterministic-jitter backoff for transient
+    dispatch-class faults;
+  * ``"skip"``    — failed jobs yield ``None`` in the profile list; every
+    successful job's profile is still returned.
+
+Contract violations (malformed jobs, out-of-contract explicit requests)
+raise in EVERY mode — they are programming errors that recur identically on
+each rung, and silently skipping them would hide bugs.
+
+Dispatch is bounded by ``timeout_s``: a device shard that hangs past it is
+treated as lost — the device is evicted through a ``HealthMonitor`` and the
+shard's task slice is resubmitted ONCE to a surviving device before the
+per-job ladder takes over.  Whatever happened, ``BatchStats.failure_report``
+enumerates each failure with its typed cause and the recovery action taken,
+and layered cache lookups (memory → on-disk store → compute) record
+quarantined-and-recomputed corrupt store entries there too.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
@@ -54,18 +84,44 @@ from repro.core.switching import (
     _cache_get,
     _cache_key,
     _cache_put,
+    _note_batch_stores,
     _operand_digest,
     _resolve_backend,
     DEFAULT_BACKEND,
     os_stream_counts,
     profile_gemm,
+    profile_store,
+)
+from repro.runtime import faults
+from repro.runtime.health import HealthMonitor
+from repro.runtime.resilience import (
+    CacheCorruptionError,
+    ContractViolationError,
+    DeviceDispatchError,
+    FailureReport,
+    ProfileDegradationWarning,
+    ProfileError,
+    RetryPolicy,
+    call_with_retry,
+    classify_exception,
+    degradation_ladder,
 )
 
 __all__ = [
     "ProfileJob",
     "BatchStats",
     "run_profile_batch",
+    "ON_ERROR_MODES",
 ]
+
+ON_ERROR_MODES = ("raise", "degrade", "skip")
+
+# Environment defaults: a chaos CI run (fault injection over the whole
+# tier-1 suite) flips the fleet-wide policy to "degrade" without touching
+# call sites; a serving deployment pins a dispatch budget the same way.
+DEFAULT_ON_ERROR = os.environ.get("REPRO_ON_ERROR", "raise")
+_env_timeout = os.environ.get("REPRO_PROFILE_TIMEOUT_S", "").strip()
+DEFAULT_TIMEOUT_S: float | None = float(_env_timeout) if _env_timeout else None
 
 
 @dataclasses.dataclass
@@ -90,30 +146,41 @@ class ProfileJob:
     name: str = ""
     dataflow: str = "WS"
 
+    def label(self, index: int) -> str:
+        return self.name or f"job{index}"
+
     def gemm_shape(self) -> tuple[int, int, int]:
         """(M, K, N) without materializing lazy operands."""
         if self.a is not None and self.w is not None:
             return (self.a.shape[0], self.a.shape[1], self.w.shape[1])
         if self.shape is None:
-            raise ValueError(f"lazy job {self.name!r} needs shape=(m, k, n)")
+            raise ContractViolationError(
+                f"lazy job {self.name!r} needs shape=(m, k, n)", job=self.name
+            )
         return tuple(self.shape)
 
     def operands(self) -> tuple[np.ndarray, np.ndarray]:
         """Materialize (and keep) int64 operands, validated against shape."""
         if self.a is None or self.w is None:
             if self.make is None:
-                raise ValueError(f"job {self.name!r} has neither operands nor make")
+                raise ContractViolationError(
+                    f"job {self.name!r} has neither operands nor make",
+                    job=self.name,
+                )
             a, w = self.make()
             self.a, self.w = np.asarray(a), np.asarray(w)
         a = np.asarray(self.a, dtype=np.int64)
         w = np.asarray(self.w, dtype=np.int64)
         if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
-            raise ValueError(f"bad GEMM shapes {a.shape} x {w.shape}")
+            raise ContractViolationError(
+                f"bad GEMM shapes {a.shape} x {w.shape}", job=self.name
+            )
         declared = (a.shape[0], a.shape[1], w.shape[1])
         if self.shape is not None and tuple(self.shape) != declared:
-            raise ValueError(
+            raise ContractViolationError(
                 f"job {self.name!r}: declared shape {tuple(self.shape)} != "
-                f"materialized {declared}"
+                f"materialized {declared}",
+                job=self.name,
             )
         self.a, self.w = a, w
         return a, w
@@ -125,15 +192,23 @@ class BatchStats:
 
     jobs: int = 0
     cache_hits: int = 0
+    store_hits: int = 0  # cache_hits served by the on-disk store layer
     passes: int = 0  # device operand-passes scheduled (strips + tiles)
     pass_reuse: int = 0  # jobs served by an already-scheduled pass
     buckets: int = 0  # padded shape classes == fused programs dispatched
     serial_fallbacks: int = 0
     tasks: int = 0  # stacked (tile, segment) device tasks across all buckets
     strips: int = 0  # stacked seeded stream windows across all buckets
+    retries: int = 0  # extra attempts spent inside recovery ladders
+    degraded: int = 0  # jobs recovered per-job after a batched-path failure
+    skipped: int = 0  # jobs returned as None under on_error="skip"
+    resubmits: int = 0  # device shards resubmitted after eviction
+    failure_report: FailureReport = dataclasses.field(default_factory=FailureReport)
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        out = dataclasses.asdict(self)
+        out["failure_report"] = self.failure_report.as_dict()
+        return out
 
 
 @dataclasses.dataclass
@@ -150,6 +225,18 @@ class _Pass:
 
 
 @dataclasses.dataclass
+class _Shard:
+    """One dispatched slice of a bucket's task axis (resubmittable)."""
+
+    label: str
+    args: tuple  # (strips, w_tiles, ids, wids, vr)
+    kwargs: dict
+    device_index: int
+    future: object
+    resubmits: int = 0
+
+
+@dataclasses.dataclass
 class _Bucket:
     rows: int
     cols: int
@@ -161,7 +248,8 @@ class _Bucket:
     strip_ids: list = dataclasses.field(default_factory=list)
     w_ids: list = dataclasses.field(default_factory=list)
     valid_r: list = dataclasses.field(default_factory=list)
-    future: object | None = None  # -> (h_parts, v_parts, num_tasks) handles
+    shards: list = dataclasses.field(default_factory=list)  # [_Shard]
+    error: ProfileError | None = None
 
 
 @dataclasses.dataclass
@@ -181,7 +269,8 @@ class _StreamBucket:
     bits: int
     t_seg: int
     strips: list = dataclasses.field(default_factory=list)
-    future: object | None = None  # -> per-strip totals handle
+    future: object | None = None  # -> per-strip int64 totals
+    error: ProfileError | None = None
 
 
 def _next_pow2(x: int) -> int:
@@ -351,6 +440,97 @@ def _schedule_os_job(
     return tuple(keys)
 
 
+def _ladder_recover(
+    job: ProfileJob,
+    label: str,
+    cause: ProfileError,
+    *,
+    engine: str,
+    interpret: bool,
+    use_cache: bool,
+    store_key: bytes | None,
+    policy: RetryPolicy,
+    stats: BatchStats,
+    report: FailureReport,
+):
+    """Recover ONE job down the backend ladder after a batched-path failure.
+
+    Walks ``degradation_ladder(engine)`` rung by rung.  Dispatch-class
+    faults (device loss, timeouts, runtime errors) are retried within a
+    rung under ``policy``'s backoff; compile-class and contract faults
+    descend immediately — they recur deterministically.  Every rung
+    computes identical integer toggle counts, so whichever rung lands
+    first yields the bit-exact profile.  Returns ``(profile, None)`` or
+    ``(None, last_error)`` if even the numpy oracle failed.
+    """
+    from repro.kernels.activity_profile.ops import profile_gemm_toggles
+
+    try:
+        a, w = job.operands()
+    except Exception as exc:  # malformed job: nothing to degrade to
+        return None, classify_exception(exc, job=label, stage="recover")
+
+    inj = faults.active()
+    last = cause
+    for rung in degradation_ladder(engine):
+
+        def attempt(rung=rung):
+            if inj is not None:
+                inj.maybe_fail_backend(f"ladder:{rung}", label)
+                inj.maybe_lose_device(f"ladder:{rung}", label)
+            if rung == "numpy":
+                return profile_gemm(
+                    a, w, job.rows, job.cols, job.b_h, job.b_v,
+                    dataflow=job.dataflow, backend="numpy", use_cache=False,
+                )
+            counts = profile_gemm_toggles(
+                a, w, job.rows, job.cols, job.b_h, job.b_v,
+                dataflow=job.dataflow, engine=rung, interpret=interpret,
+            )
+            a_h, a_v = counts.activities(job.b_h, job.b_v)
+            return ActivityProfile(
+                a_h=a_h,
+                a_v=a_v,
+                b_h=job.b_h,
+                b_v=job.b_v,
+                h_transitions=counts.h_transitions,
+                v_transitions=counts.v_transitions,
+                input_zero_fraction=float(np.mean(a == 0)),
+                input_elements=int(a.size),
+            )
+
+        try:
+            profile, attempts, _ = call_with_retry(
+                attempt,
+                policy=policy,
+                key=f"{label}:{rung}",
+                retry_on=(DeviceDispatchError,),
+            )
+        except ProfileError as err:
+            stats.retries += getattr(err, "attempts", 1) - 1
+            last = err
+            continue
+        stats.retries += attempts - 1
+        stats.degraded += 1
+        # Record the ORIGINAL cause, not the last rung's failure: the report
+        # answers "what fault made this job degrade", and intermediate rung
+        # descents are bookkept in stats.retries.
+        report.add(
+            cause,
+            action=f"degraded:{rung}",
+            job=label,
+            stage="recover",
+            attempts=attempts,
+        )
+        if use_cache and store_key is not None:
+            # Counts are rung-invariant, so the recovered profile is stored
+            # under the job's ORIGINAL batched-path key: the next run hits
+            # the cache instead of re-dispatching the fused program.
+            _cache_put(store_key, profile)
+        return profile, None
+    return None, last
+
+
 def run_profile_batch(
     jobs: Sequence[ProfileJob],
     *,
@@ -358,7 +538,11 @@ def run_profile_batch(
     engine: str = "auto",
     interpret: bool = False,
     use_cache: bool = True,
-) -> tuple[list[ActivityProfile], BatchStats]:
+    on_error: str | None = None,
+    timeout_s: float | None = None,
+    retry: RetryPolicy | None = None,
+    health: HealthMonitor | None = None,
+) -> tuple[list[ActivityProfile | None], BatchStats]:
     """Profile every job; returns (profiles in input order, scheduler stats).
 
     ``backend`` follows ``profile_gemm``: ``"numpy"`` runs the serial
@@ -366,6 +550,21 @@ def run_profile_batch(
     batched fused pipeline with per-job fallback to serial for operands the
     engine cannot take. ``engine``/``interpret`` pick the device rendering
     (Pallas kernel on TPU, XLA elsewhere) exactly like the per-GEMM engine.
+
+    ``on_error`` selects the failure policy (default ``$REPRO_ON_ERROR`` or
+    ``"raise"``): ``"raise"`` fails fast with a typed
+    ``repro.runtime.resilience.ProfileError``; ``"degrade"`` recovers each
+    affected job individually down the backend ladder (bit-exact — every
+    rung computes the same integer counts); ``"skip"`` returns ``None`` for
+    failed jobs and every successful profile.  Contract violations
+    (malformed jobs) raise in all modes.  ``timeout_s`` (default
+    ``$REPRO_PROFILE_TIMEOUT_S`` or unbounded) bounds each dispatched
+    shard; a shard that exceeds it has its device evicted via ``health``
+    (a ``HealthMonitor``, created internally when not passed) and its task
+    slice resubmitted once to a surviving device.  ``retry`` is the
+    ``RetryPolicy`` for transient faults inside recovery ladders.
+    ``BatchStats.failure_report`` enumerates every failure with its typed
+    cause and the recovery action taken.
     """
     from repro.kernels.activity_profile.batch import (
         bucket_toggle_parts,
@@ -377,25 +576,75 @@ def run_profile_batch(
 
     jobs = list(jobs)
     stats = BatchStats(jobs=len(jobs))
+    report = stats.failure_report
     requested = backend if backend is not None else DEFAULT_BACKEND
+    mode = on_error if on_error is not None else DEFAULT_ON_ERROR
+    if mode not in ON_ERROR_MODES:
+        raise ContractViolationError(
+            f"unknown on_error mode {mode!r}; know {ON_ERROR_MODES}"
+        )
+    if timeout_s is None:
+        timeout_s = DEFAULT_TIMEOUT_S
+    policy = retry if retry is not None else RetryPolicy()
+    store = profile_store()
+    store_hits0 = store.stats["hits"] if store is not None else 0
+
+    def _finish(profiles):
+        if store is not None:
+            stats.store_hits = store.stats["hits"] - store_hits0
+            for hexkey in store.drain_quarantine_events():
+                report.add(
+                    CacheCorruptionError(
+                        f"store entry {hexkey[:16]}… failed integrity "
+                        "verification",
+                        stage="store",
+                    ),
+                    action="quarantined:recomputed",
+                    job=hexkey[:16],
+                )
+        if use_cache:
+            _note_batch_stores(stats.jobs - stats.cache_hits)
+        return profiles, stats
+
+    def _serial_job(job, i, resolved_backend):
+        """One serial-path profile under the active failure policy."""
+        label = job.label(i)
+        try:
+            a, w = job.operands()
+            inj = faults.active()
+            if inj is not None and resolved_backend != "numpy":
+                inj.maybe_fail_backend("serial", label)
+            return profile_gemm(
+                a, w, job.rows, job.cols, job.b_h, job.b_v,
+                dataflow=job.dataflow, backend=resolved_backend,
+                use_cache=use_cache,
+            )
+        except Exception as exc:
+            err = classify_exception(exc, job=label, stage="serial")
+            if mode == "raise" or isinstance(err, ContractViolationError):
+                raise err from exc
+            if mode == "degrade" and resolved_backend != "numpy":
+                profile, ladder_err = _ladder_recover(
+                    job, label, err,
+                    engine=engine, interpret=interpret, use_cache=use_cache,
+                    store_key=None, policy=policy, stats=stats, report=report,
+                )
+                if profile is not None:
+                    return profile
+                err = ladder_err
+            stats.skipped += 1
+            report.add(err, action="skipped", job=label, stage="serial")
+            return None
 
     if requested == "numpy":
         # Serial oracle per job: no jax import, no device or thread work at
         # all (the docstring's contract for numpy-only callers).
         stats.serial_fallbacks = len(jobs)
-        profiles = []
-        for job in jobs:
-            a, w = job.operands()
-            profiles.append(
-                profile_gemm(
-                    a, w, job.rows, job.cols, job.b_h, job.b_v,
-                    dataflow=job.dataflow, backend="numpy", use_cache=use_cache,
-                )
-            )
-        return profiles, stats
+        profiles = [_serial_job(job, i, "numpy") for i, job in enumerate(jobs)]
+        return _finish(profiles)
 
     # resolution[i]: ("cache", profile) | ("pass", key) | ("os_pass", keys)
-    #             | ("serial", backend)
+    #             | ("serial", backend) | ("failed", typed error)
     resolution: list[tuple] = [None] * len(jobs)
     bucket_map: dict[tuple, int] = {}
     buckets: list[_Bucket] = []
@@ -422,12 +671,37 @@ def run_profile_batch(
         import jax
 
         devices = jax.local_devices()
-    except Exception:  # pragma: no cover - jax import already vetted upstream
+    except (ImportError, RuntimeError) as exc:  # pragma: no cover - no jax
+        # Narrow on purpose: ImportError = jax genuinely absent,
+        # RuntimeError = jax present but backend init failed.  Anything else
+        # is a real bug that must NOT masquerade as "jax unavailable".
+        warnings.warn(
+            f"batched pipeline: jax unavailable for device dispatch "
+            f"({type(exc).__name__}: {exc}); falling back to a single "
+            "anonymous device slot",
+            ProfileDegradationWarning,
+            stacklevel=2,
+        )
         devices = [None]
+
+    if health is None:
+        health = HealthMonitor(range(len(devices)))
 
     executor = ThreadPoolExecutor(max_workers=max(2, len(devices)))
 
-    def _submit_bucket(b: _Bucket) -> list:
+    def _run_shard(args, kw, device_index, site):
+        """Executor task for one shard: fault hooks, compile + dispatch,
+        BLOCKING reduce — so ``future.result(timeout=...)`` bounds the whole
+        device round-trip, not just program construction."""
+        inj = faults.active()
+        if inj is not None:
+            inj.maybe_fail_backend("bucket-dispatch", site)
+            inj.maybe_hang("bucket-exec", site)
+            inj.maybe_lose_device("bucket-shard", site)
+        parts = bucket_toggle_parts(*args, device=devices[device_index], **kw)
+        return reduce_bucket_parts(*parts)
+
+    def _submit_bucket(bidx: int, b: _Bucket) -> list[_Shard]:
         """One executor task per shard: shard compiles (each device binding
         compiles its own executable) and executions all run concurrently."""
         strips = np.stack(b.strips)
@@ -441,8 +715,12 @@ def run_profile_batch(
             engine=engine, interpret=interpret,
         )
         if n_shards == 1:
-            return [executor.submit(bucket_toggle_parts, strips, w_tiles,
-                                    ids, wids, vr, **kw)]
+            args = (strips, w_tiles, ids, wids, vr)
+            site = f"b{bidx}s0d0"
+            return [
+                _Shard(site, args, kw, 0,
+                       executor.submit(_run_shard, args, kw, 0, site))
+            ]
         # Equal-length slices (tail padded with valid_r=0 dummies that count
         # zero) so every shard lowers the same program shape. Only shard 0's
         # h_parts are used at collection — h is per-strip and every shard
@@ -454,17 +732,75 @@ def run_profile_batch(
             ids = np.concatenate([ids, zeros])
             wids = np.concatenate([wids, zeros])
             vr = np.concatenate([vr, zeros])
-        return [
-            executor.submit(
-                bucket_toggle_parts, strips, w_tiles,
+        shards = []
+        for s in range(n_shards):
+            args = (
+                strips, w_tiles,
                 ids[s * per : (s + 1) * per],
                 wids[s * per : (s + 1) * per],
                 vr[s * per : (s + 1) * per],
-                device=devices[s % len(devices)],
-                **kw,
             )
-            for s in range(n_shards)
-        ]
+            didx = s % len(devices)
+            site = f"b{bidx}s{s}d{didx}"
+            shards.append(
+                _Shard(site, args, kw, didx,
+                       executor.submit(_run_shard, args, kw, didx, site))
+            )
+        return shards
+
+    def _run_stream(strips, bits, site):
+        inj = faults.active()
+        if inj is not None:
+            inj.maybe_fail_backend("stream-dispatch", site)
+            inj.maybe_hang("stream-exec", site)
+        parts = stream_bucket_parts(
+            strips, bits=bits, engine=engine, interpret=interpret
+        )
+        return reduce_stream_parts(parts)
+
+    def _await_shard(shard: _Shard):
+        """Block on one shard (bounded by ``timeout_s``); returns
+        ``(h, v, error)``.  A dispatch-class failure evicts the shard's
+        device through the health monitor and resubmits the task slice
+        EXACTLY ONCE to a surviving device before giving up on the shard."""
+        while True:
+            t0 = time.monotonic()
+            try:
+                h, v = shard.future.result(timeout=timeout_s)
+                health.heartbeat(shard.device_index, time.monotonic())
+                health.report_step_time(
+                    shard.device_index, time.monotonic() - t0
+                )
+                return h, v, None
+            except Exception as exc:
+                err = classify_exception(exc, stage="dispatch", job=shard.label)
+                if mode == "raise":
+                    raise err from exc
+                if (
+                    shard.resubmits == 0
+                    and isinstance(err, DeviceDispatchError)
+                    and len(devices) > 1
+                ):
+                    health.evict(shard.device_index)
+                    alive = health.alive_hosts()
+                    if alive:
+                        new_idx = alive[shard.resubmits % len(alive)]
+                        report.add(
+                            err,
+                            action="device-evicted:resubmitted",
+                            job=shard.label,
+                            stage="dispatch",
+                        )
+                        shard.resubmits += 1
+                        shard.device_index = new_idx
+                        stats.resubmits += 1
+                        shard.future = executor.submit(
+                            _run_shard, shard.args, shard.kwargs, new_idx,
+                            shard.label,
+                        )
+                        continue
+                return None, None, err
+
     prefetch_pool = ThreadPoolExecutor(max_workers=1)
     try:
         if devices != [None]:
@@ -496,7 +832,14 @@ def run_profile_batch(
             )
             for i in members:
                 job = jobs[i]
-                a, w = prefetched.pop(i).result()
+                try:
+                    a, w = prefetched.pop(i).result()
+                except Exception as exc:
+                    # Malformed jobs are programming errors: typed, and
+                    # raised in EVERY mode (skipping them would hide bugs).
+                    raise classify_exception(
+                        exc, job=job.label(i), stage="schedule"
+                    ) from exc
                 _advance_prefetch()
                 resolved = _resolve_backend(backend, a, w, job.rows, job.dataflow)
                 if use_cache:
@@ -504,7 +847,7 @@ def run_profile_batch(
                         a, w, job.rows, job.cols, job.b_h, job.b_v,
                         (resolved, job.dataflow, "exact"),
                     )
-                    hit = _cache_get(key)
+                    hit, _source = _cache_get(key)
                     if hit is not None:
                         resolution[i] = ("cache", hit)
                         stats.cache_hits += 1
@@ -559,19 +902,18 @@ def run_profile_batch(
             for bidx in {pass_map[r[1][0]].bucket for j in members
                          if (r := resolution[j])[0] == "pass"}:
                 b = buckets[bidx]
-                if b.future is None and b.strip_ids:
-                    b.future = _submit_bucket(b)
+                if not b.shards and b.strip_ids:
+                    b.shards = _submit_bucket(bidx, b)
         # Stream buckets are submitted only after ALL groups are scheduled:
         # unlike WS buckets (whose bucket key IS the group key), one
         # (bits, t_seg) stream bucket can collect strips from several
         # (b_h, b_v) job groups, so an early submit would freeze it before
         # later groups append.  They are strips-only programs — a trivial
         # fraction of the device work — so the lost overlap is nil.
-        for b in stream_buckets:
+        for sidx, b in enumerate(stream_buckets):
             if b.future is None and b.strips:
                 b.future = executor.submit(
-                    stream_bucket_parts, np.stack(b.strips),
-                    bits=b.bits, engine=engine, interpret=interpret,
+                    _run_stream, np.stack(b.strips), b.bits, f"sb{sidx}"
                 )
 
         stats.buckets = len(buckets) + len(stream_buckets)
@@ -580,69 +922,104 @@ def run_profile_batch(
             len(b.strips) for b in stream_buckets
         )
 
-        # Collection: block on each bucket once, fold per-pass totals.
-        # Sharded buckets: h comes from shard 0 (identical in all shards),
-        # v concatenates the contiguous task slices back together.
+        # Collection: block on each bucket once (each shard bounded by
+        # timeout_s), fold per-pass totals.  Sharded buckets: h comes from
+        # shard 0 (identical in all shards), v concatenates the contiguous
+        # task slices back together.  A bucket whose shards cannot be
+        # recovered records its typed error; its jobs are degraded or
+        # skipped per job below.
         reduced = []
         for b in buckets:
-            if b.future is None:
+            if not b.shards:
                 reduced.append(None)
                 continue
             h_tot = None
             v_chunks = []
-            for hi, fut in enumerate(b.future):
-                h, v = reduce_bucket_parts(*fut.result())
-                if hi == 0:
+            for si, shard in enumerate(b.shards):
+                h, v, err = _await_shard(shard)
+                if err is not None:
+                    b.error = err
+                    break
+                if si == 0:
                     h_tot = h
                 v_chunks.append(v)
-            reduced.append((h_tot, np.concatenate(v_chunks)[: len(b.strip_ids)]))
-        stream_reduced = [
-            reduce_stream_parts(b.future.result()) if b.future is not None else None
-            for b in stream_buckets
-        ]
+            if b.error is not None:
+                reduced.append(None)
+                continue
+            reduced.append(
+                (h_tot, np.concatenate(v_chunks)[: len(b.strip_ids)])
+            )
+        stream_reduced = []
+        for b in stream_buckets:
+            if b.future is None:
+                stream_reduced.append(None)
+                continue
+            try:
+                stream_reduced.append(b.future.result(timeout=timeout_s))
+            except Exception as exc:
+                err = classify_exception(exc, stage="dispatch")
+                if mode == "raise":
+                    raise err from exc
+                b.error = err
+                stream_reduced.append(None)
     finally:
         executor.shutdown(wait=True)
         prefetch_pool.shutdown(wait=True)
     for p in pass_map.values():
+        if reduced[p.bucket] is None:
+            continue  # failed bucket: totals stay None, jobs recover below
         h_tot, v_tot = reduced[p.bucket]
         p.h_total = int(h_tot[p.strip_lo : p.strip_hi].sum())
         p.v_total = int(v_tot[p.tile_lo : p.tile_hi].sum())
     for sp in stream_pass_map.values():
+        if stream_reduced[sp.bucket] is None:
+            continue
         sp.total = int(stream_reduced[sp.bucket][sp.strip_lo : sp.strip_hi].sum())
 
-    profiles: list[ActivityProfile] = []
+    def _recover_or_skip(i, job, cause, store_key):
+        """Per-job policy application after a batched-path failure."""
+        label = job.label(i)
+        if mode == "degrade":
+            profile, err = _ladder_recover(
+                job, label, cause,
+                engine=engine, interpret=interpret, use_cache=use_cache,
+                store_key=store_key, policy=policy, stats=stats, report=report,
+            )
+            if profile is not None:
+                return profile
+            cause = err
+        stats.skipped += 1
+        report.add(cause, action="skipped", job=label, stage="collect")
+        return None
+
+    profiles: list[ActivityProfile | None] = []
     for i, job in enumerate(jobs):
         kind, payload = resolution[i]
         if kind == "cache":
             profiles.append(payload)
             continue
         if kind == "serial":
-            profiles.append(
-                profile_gemm(
-                    job.a,
-                    job.w,
-                    job.rows,
-                    job.cols,
-                    job.b_h,
-                    job.b_v,
-                    dataflow=job.dataflow,
-                    backend=payload,
-                    use_cache=use_cache,
-                )
-            )
+            profiles.append(_serial_job(job, i, payload))
             continue
         key, zero_fraction, elements, store_key = payload
         m, k, n = job.gemm_shape()
         n_tiles = -(-n // job.cols)
         if kind == "os_pass":
+            key_a, key_w = key
+            sps = (stream_pass_map[key_a], stream_pass_map[key_w])
+            if any(sp.total is None for sp in sps):
+                cause = next(
+                    stream_buckets[sp.bucket].error
+                    for sp in sps
+                    if sp.total is None
+                )
+                profiles.append(_recover_or_skip(i, job, cause, store_key))
+                continue
             # Geometry-free stream totals fold through the shared OS
             # accounting identity with each job's own output tiling.
-            key_a, key_w = key
             counts = ToggleCounts(
                 *os_stream_counts(
-                    stream_pass_map[key_a].total,
-                    stream_pass_map[key_w].total,
-                    m, k, n, job.rows, job.cols,
+                    sps[0].total, sps[1].total, m, k, n, job.rows, job.cols
                 )
             )
             a_h, a_v = counts.activities(job.b_h, job.b_v)
@@ -653,6 +1030,11 @@ def run_profile_batch(
             )
             continue
         p = pass_map[key]
+        if p.h_total is None:
+            profiles.append(
+                _recover_or_skip(i, job, buckets[p.bucket].error, store_key)
+            )
+            continue
         counts = ToggleCounts(
             n_tiles * p.h_total,
             p.v_total,
@@ -663,7 +1045,7 @@ def run_profile_batch(
         profiles.append(
             _store_profile(job, counts, a_h, a_v, zero_fraction, elements, store_key)
         )
-    return profiles, stats
+    return _finish(profiles)
 
 
 def _store_profile(

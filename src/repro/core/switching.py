@@ -64,6 +64,12 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.runtime.resilience import (
+    CacheThrashWarning,
+    ContractViolationError,
+    ProfileDegradationWarning,
+)
+
 __all__ = [
     "popcount",
     "toggles_between",
@@ -83,6 +89,10 @@ __all__ = [
     "combine_profiles",
     "clear_profile_cache",
     "profile_cache_info",
+    "set_profile_cache_capacity",
+    "configure_profile_store",
+    "profile_store",
+    "profile_store_info",
 ]
 
 DEFAULT_BACKEND = os.environ.get("REPRO_ACTIVITY_BACKEND", "auto")
@@ -343,12 +353,14 @@ def _fused_importable() -> bool:
 
 
 def _warn_numpy_fallback(reason: str) -> None:
-    # warnings dedups by (message, location), so this surfaces once per run
+    # warnings dedups by (message, location), so this surfaces once per run.
+    # Typed (ProfileDegradationWarning subclasses RuntimeWarning) so callers
+    # can filter degradations from generic runtime noise.
     warnings.warn(
         f"profile_gemm: fused engine unavailable ({reason}); using the "
         "slow numpy oracle. Exact full-stream profiling is the default — "
         "pass max_tiles/max_stream to bound large workloads.",
-        RuntimeWarning,
+        ProfileDegradationWarning,
         stacklevel=4,
     )
 
@@ -384,7 +396,7 @@ def _resolve_backend(
             return "numpy"
         return "pallas"
     if backend not in ("numpy", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+        raise ContractViolationError(f"unknown backend {backend!r}")
     return backend
 
 
@@ -392,20 +404,125 @@ def _resolve_backend(
 # Benchmarks and examples repeatedly profile the same synthetic layers; a
 # profile is a pure function of (operands, geometry, plan), so memoize on
 # content. Exact-mode keys ignore the seed (it only feeds the subsampler).
+#
+# Lookup is LAYERED: memory -> on-disk store -> compute.  The store
+# (``repro.core.profile_store``) shares the same keys across processes; it
+# is enabled by ``configure_profile_store(path)`` or ``$REPRO_PROFILE_STORE``
+# and stays off otherwise (in-process behavior is then exactly the old
+# memory-only cache).
+
+_KEY_VERSION = "v4"  # also the on-disk store's schema-version directory
 
 _PROFILE_CACHE: OrderedDict[bytes, ActivityProfile] = OrderedDict()
-_PROFILE_CACHE_CAPACITY = 128
-_PROFILE_CACHE_STATS = {"hits": 0, "misses": 0}
+_PROFILE_CACHE_CAPACITY = max(
+    1, int(os.environ.get("REPRO_PROFILE_CACHE_CAPACITY", "128"))
+)
+_PROFILE_CACHE_STATS = {"hits": 0, "misses": 0, "store_hits": 0, "evictions": 0}
+_THRASH_WARNED = False
+
+_PROFILE_STORE = None
+_PROFILE_STORE_RESOLVED = False
 
 
 def clear_profile_cache() -> None:
+    """Drop the in-memory cache + reset its counters (the on-disk store, if
+    configured, is NOT touched — it exists to outlive process state)."""
+    global _THRASH_WARNED
     _PROFILE_CACHE.clear()
-    _PROFILE_CACHE_STATS["hits"] = 0
-    _PROFILE_CACHE_STATS["misses"] = 0
+    for k in _PROFILE_CACHE_STATS:
+        _PROFILE_CACHE_STATS[k] = 0
+    _THRASH_WARNED = False
 
 
 def profile_cache_info() -> dict:
-    return {"size": len(_PROFILE_CACHE), **_PROFILE_CACHE_STATS}
+    return {
+        "size": len(_PROFILE_CACHE),
+        "capacity": _PROFILE_CACHE_CAPACITY,
+        **_PROFILE_CACHE_STATS,
+    }
+
+
+def set_profile_cache_capacity(capacity: int) -> int:
+    """Set the in-memory LRU capacity (entries); returns the previous value.
+
+    The default comes from ``$REPRO_PROFILE_CACHE_CAPACITY`` (128 when
+    unset).  A single network-scale batch that stores more profiles than
+    this thrashes mid-workload (see ``CacheThrashWarning``)."""
+    global _PROFILE_CACHE_CAPACITY
+    if capacity < 1:
+        raise ContractViolationError("cache capacity must be >= 1")
+    prev = _PROFILE_CACHE_CAPACITY
+    _PROFILE_CACHE_CAPACITY = int(capacity)
+    while len(_PROFILE_CACHE) > _PROFILE_CACHE_CAPACITY:
+        _PROFILE_CACHE.popitem(last=False)
+        _PROFILE_CACHE_STATS["evictions"] += 1
+    return prev
+
+
+def configure_profile_store(path=None, *, max_bytes=None):
+    """Enable (or with ``path=None`` disable) the on-disk profile store.
+
+    ``path`` may also be an existing ``ProfileStore`` instance, installed
+    as-is with its statistics intact (callers that temporarily swap stores
+    restore the previous one this way).  Returns the active ``ProfileStore``
+    (or None).  Overrides any ``$REPRO_PROFILE_STORE`` environment
+    configuration for this process."""
+    global _PROFILE_STORE, _PROFILE_STORE_RESOLVED
+    from repro.core.profile_store import ProfileStore, _DEFAULT_MAX_BYTES
+
+    _PROFILE_STORE_RESOLVED = True
+    if path is None:
+        _PROFILE_STORE = None
+        return None
+    if isinstance(path, ProfileStore):
+        _PROFILE_STORE = path
+        return _PROFILE_STORE
+    _PROFILE_STORE = ProfileStore(
+        path,
+        max_bytes=_DEFAULT_MAX_BYTES if max_bytes is None else max_bytes,
+        version=_KEY_VERSION,
+    )
+    return _PROFILE_STORE
+
+
+def profile_store():
+    """The active on-disk store: explicit configuration first, else lazily
+    from ``$REPRO_PROFILE_STORE`` (+ ``$REPRO_PROFILE_STORE_MAX_BYTES``),
+    else None."""
+    global _PROFILE_STORE, _PROFILE_STORE_RESOLVED
+    if not _PROFILE_STORE_RESOLVED:
+        _PROFILE_STORE_RESOLVED = True
+        path = os.environ.get("REPRO_PROFILE_STORE", "").strip()
+        if path:
+            max_bytes = os.environ.get("REPRO_PROFILE_STORE_MAX_BYTES")
+            configure_profile_store(
+                path, max_bytes=int(max_bytes) if max_bytes else None
+            )
+    return _PROFILE_STORE
+
+
+def profile_store_info() -> dict | None:
+    store = profile_store()
+    return None if store is None else store.info()
+
+
+def _note_batch_stores(n_stored: int) -> None:
+    """One-shot mid-workload thrash warning: a single batch stored more
+    profiles than the memory cache holds, so jobs at the batch's end
+    evicted entries its consumers (e.g. a design-space sweep re-reading
+    every layer) still need."""
+    global _THRASH_WARNED
+    if _THRASH_WARNED or n_stored <= _PROFILE_CACHE_CAPACITY:
+        return
+    _THRASH_WARNED = True
+    warnings.warn(
+        f"one profiling batch stored {n_stored} profiles but the in-memory "
+        f"cache holds only {_PROFILE_CACHE_CAPACITY}; mid-workload eviction "
+        "will thrash re-reads. Raise REPRO_PROFILE_CACHE_CAPACITY or call "
+        "set_profile_cache_capacity() to fit the working set.",
+        CacheThrashWarning,
+        stacklevel=3,
+    )
 
 
 def _operand_digest(arr: np.ndarray) -> bytes:
@@ -433,27 +550,46 @@ def _cache_key(
     strictly more data than aggregate ones and must not alias them; it also
     retires any pre-lane "v3" entry shape)."""
     h = hashlib.sha256()
-    h.update(repr(("v4", a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode())
+    h.update(
+        repr((_KEY_VERSION, a.shape, w.shape, rows, cols, b_h, b_v, mode)).encode()
+    )
     for arr in (a, w):
         h.update(_operand_digest(arr))
     return h.digest()
 
 
-def _cache_get(key: bytes) -> ActivityProfile | None:
-    """LRU lookup + hit/miss accounting (shared with the batch pipeline)."""
+def _cache_get(key: bytes) -> tuple[ActivityProfile | None, str | None]:
+    """Layered lookup (memory -> disk store); returns ``(profile, source)``
+    with ``source`` in ``("memory", "store", None)``.  Hit/miss accounting
+    is shared with the batch pipeline; a store hit is promoted into the
+    memory LRU (without a write-back to disk)."""
     hit = _PROFILE_CACHE.get(key)
     if hit is not None:
         _PROFILE_CACHE_STATS["hits"] += 1
         _PROFILE_CACHE.move_to_end(key)
-        return hit
+        return hit, "memory"
+    store = profile_store()
+    if store is not None:
+        hit = store.get(key)
+        if hit is not None:
+            _PROFILE_CACHE_STATS["store_hits"] += 1
+            _cache_put(key, hit, write_store=False)
+            return hit, "store"
     _PROFILE_CACHE_STATS["misses"] += 1
-    return None
+    return None, None
 
 
-def _cache_put(key: bytes, profile: ActivityProfile) -> None:
+def _cache_put(
+    key: bytes, profile: ActivityProfile, *, write_store: bool = True
+) -> None:
     _PROFILE_CACHE[key] = profile
     while len(_PROFILE_CACHE) > _PROFILE_CACHE_CAPACITY:
         _PROFILE_CACHE.popitem(last=False)
+        _PROFILE_CACHE_STATS["evictions"] += 1
+    if write_store:
+        store = profile_store()
+        if store is not None:
+            store.put(key, profile)
 
 
 def _profile_numpy(a, w, b_h, b_v, plan) -> tuple[float, float, int, int]:
@@ -644,7 +780,7 @@ def profile_gemm(
     key = None
     if use_cache:
         key = _cache_key(a, w, rows, cols, b_h, b_v, (resolved, dataflow, *mode))
-        hit = _cache_get(key)
+        hit, _ = _cache_get(key)
         if hit is not None:
             return hit
 

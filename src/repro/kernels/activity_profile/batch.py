@@ -70,6 +70,7 @@ from repro.kernels.activity_profile.kernel import (
     value32_toggles,
 )
 from repro.kernels.bitops import popcount_u32
+from repro.runtime.resilience import ContractViolationError
 
 __all__ = [
     "TASK_CHUNK_BUDGET",
@@ -294,7 +295,10 @@ def bucket_toggle_parts(
             *args, rows=rows, cols=cols, b_v=b_v, interpret=interpret
         )
     else:
-        raise ValueError(f"unknown engine {engine!r}")
+        # typed (still a ValueError subclass): an unknown engine is a
+        # caller bug, not a retryable fault — it must raise in every
+        # on_error mode rather than walk the degradation ladder
+        raise ContractViolationError(f"unknown engine {engine!r}")
     return h_parts, v_parts, num_tasks
 
 
@@ -323,7 +327,7 @@ def stream_bucket_parts(
         return _h_strips_xla(strips, b_h=bits)
     if engine == "pallas":
         return stream_strips_toggles_pallas(strips, bits=bits, interpret=interpret)
-    raise ValueError(f"unknown engine {engine!r}")
+    raise ContractViolationError(f"unknown engine {engine!r}")
 
 
 def reduce_bucket_parts(

@@ -1,1 +1,3 @@
-"""Fault-tolerance runtime: health, elastic re-mesh, coordinator."""
+"""Fault-tolerance runtime: failure taxonomy + retry/degradation ladder
+(``resilience``), deterministic fault injection (``faults``), cluster
+health/straggler policies (``health``), elastic re-mesh, coordinator."""

@@ -174,7 +174,10 @@ def test_profile_cache_hits_on_identical_content():
     profile_gemm(a2, w, 16, 8, 16, 37)
     assert profile_cache_info()["misses"] == 2
     clear_profile_cache()
-    assert profile_cache_info() == {"size": 0, "hits": 0, "misses": 0}
+    info = profile_cache_info()
+    assert info["size"] == info["hits"] == info["misses"] == 0
+    assert info["store_hits"] == info["evictions"] == 0
+    assert info["capacity"] >= 1
 
 
 def test_profile_cache_distinguishes_geometry_and_backend():
