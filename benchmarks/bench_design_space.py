@@ -356,6 +356,73 @@ def run(smoke: bool = False) -> list[dict]:
         }
     )
 
+    # --- chunked sweep: cold vs kill-and-resume ----------------------------
+    # The checkpointed runner must (a) reproduce the monolithic engine
+    # bit-for-bit, (b) resume a completed store in wall-clock dominated by
+    # chunk reads (not re-evaluation), and (c) keep warm chunked+validated
+    # throughput above the same floor the layout bench enforces.
+    import tempfile
+
+    from repro.core.sweep import _DESIGN_FIELDS, SweepConfig
+
+    sweep_floor = 1.0e4  # warm chunked points/s (bench_layout's floor)
+    with tempfile.TemporaryDirectory() as td:
+        # per-chunk guard cost (~2ms: scalar-oracle cells + f64 gss
+        # cross-check) must amortize over enough points to clear the floor
+        chunk = 64 if smoke else 512
+        sw = lambda: SweepConfig(chunk_size=chunk, store=td)
+        t0 = time.perf_counter()
+        ev_cold = evaluate_design_space(grid, a_h, a_v, use_jit=use_jit, sweep=sw())
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ev_res = evaluate_design_space(grid, a_h, a_v, use_jit=use_jit, sweep=sw())
+        t_res = time.perf_counter() - t0
+        rep_cold, rep_res = ev_cold.sweep_report, ev_res.sweep_report
+        for f in _DESIGN_FIELDS:
+            a = np.ascontiguousarray(getattr(ev_cold, f))
+            b = np.ascontiguousarray(getattr(ev_res, f))
+            assert a.tobytes() == b.tobytes(), f"resume not bit-identical: {f}"
+        assert np.array_equal(ev_cold.pareto(), ev_res.pareto())
+        assert rep_res.chunks_resumed == rep_res.chunks_total, "resume missed chunks"
+        assert rep_res.chunks_evaluated == 0, "resume re-evaluated chunks"
+        assert rep_cold.guard_failures == 0 and rep_res.guard_failures == 0
+        assert t_res < t_cold, (
+            f"resumed sweep ({t_res*1e3:.1f}ms) not faster than cold "
+            f"({t_cold*1e3:.1f}ms)"
+        )
+        # warm chunked+validated throughput (compile cache hot, no store I/O)
+        t_warm = min(
+            _timed(
+                lambda: evaluate_design_space(
+                    grid, a_h, a_v, use_jit=use_jit,
+                    sweep=SweepConfig(chunk_size=chunk),
+                )
+            )
+            for _ in range(3)
+        )
+        warm_rate = p / t_warm
+        assert warm_rate >= sweep_floor, (
+            f"warm chunked sweep {warm_rate:,.0f} points/s below floor "
+            f"{sweep_floor:,.0f}"
+        )
+    out.append(
+        {
+            "name": "design_space/sweep_resume",
+            "us_per_call": t_res * 1e6 / p,
+            "dataflow": "WS+OS",
+            "derived": (
+                f"cold {t_cold*1e3:.1f}ms (incl. chunk compile) -> resumed "
+                f"{t_res*1e3:.1f}ms over {rep_cold.chunks_total} chunks of "
+                f"{chunk}; bit-identical; warm chunked {warm_rate:,.0f} "
+                f"points/s (floor {sweep_floor:,.0f})"
+            ),
+            "sweep": {
+                "cold": rep_cold.as_dict(),
+                "resumed": rep_res.as_dict(),
+            },
+        }
+    )
+
     # --- legacy closed-form composition row (continuity with older runs) ---
     geom = SystolicArrayGeometry.paper_32x32()
     act = BusActivity.paper_resnet50()

@@ -9,9 +9,12 @@ bench_network_profile).
 ``--json PATH`` additionally writes the rows (plus per-module status) as a
 JSON document; CI uploads it as a workflow artifact so regressions can be
 diffed across runs.  Each JSON row records a ``dataflow`` field ("WS",
-"OS", "WS+OS", or "" when the row is dataflow-agnostic) and a ``layout``
+"OS", "WS+OS", or "" when the row is dataflow-agnostic), a ``layout``
 field (a layout-family name, "+"-joined names, or "" when the row is
-layout-agnostic).
+layout-agnostic), and a ``sweep`` field ({} unless the row ran through the
+chunked sweep runner, in which case it carries the machine-readable
+``SweepReport`` dicts: chunks evaluated/resumed/quarantined, guard
+verdicts, rung counts, failure records).
 """
 
 from __future__ import annotations
@@ -79,6 +82,10 @@ def main(argv: list[str] | None = None) -> None:
                         "derived": str(row["derived"]),
                         "dataflow": str(row.get("dataflow", "")),
                         "layout": str(row.get("layout", "")),
+                        # chunked-sweep accounting (chunks evaluated /
+                        # resumed / quarantined, guard verdicts) — the CI
+                        # sweep-resume and chaos jobs assert against these
+                        "sweep": row.get("sweep", {}),
                     }
                 )
             report["modules"][name] = "ok"

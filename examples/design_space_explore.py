@@ -12,14 +12,71 @@ final section re-evaluates the grid under the retired ``a_v := a_h``
 approximation and lists the design points whose ranking moved the most.
 
 Run:  PYTHONPATH=src python examples/design_space_explore.py
+
+With ``--store DIR`` the main evaluation runs through the checkpointed,
+guard-validated sweep runner: chunks are committed to a crash-safe
+content-addressed store as they finish, so a killed run (try it —
+``--max-chunks 2`` stands in for kill -9, exiting after two chunks) resumes
+bit-identically.  ``--resume`` asserts the run actually served chunks from
+the store; ``--report PATH`` writes the machine-readable validation report
+plus a sha256 digest of every result array (two runs that print the same
+digest produced bit-identical physics).
+
+Kill-and-resume end to end:
+    python examples/design_space_explore.py --store /tmp/sw --max-chunks 2
+    python examples/design_space_explore.py --store /tmp/sw --resume
 """
 
 from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
 
 import numpy as np
 
 from repro.core.design_space import DesignSpace, evaluate_design_space
 from repro.core.workloads import RESNET50_TABLE1, measured_design_activities
+
+ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+ap.add_argument("--store", default=None, metavar="DIR",
+                help="chunk store directory: run checkpointed + resumable")
+ap.add_argument("--resume", action="store_true",
+                help="require at least one chunk served from --store")
+ap.add_argument("--chunk-size", type=int, default=16)
+ap.add_argument("--max-chunks", type=int, default=None, metavar="N",
+                help="stop after N fresh chunks (simulates a killed run)")
+ap.add_argument("--report", default=None, metavar="PATH",
+                help="write the sweep validation report as JSON")
+args = ap.parse_args()
+
+sweep = None
+if args.store is not None:
+    from repro.core.sweep import SweepConfig
+
+    sweep = SweepConfig(
+        chunk_size=args.chunk_size, store=args.store, max_chunks=args.max_chunks
+    )
+elif args.resume or args.max_chunks is not None:
+    ap.error("--resume/--max-chunks require --store")
+
+
+def _write_report(report, digest=None):
+    doc = {"digest": digest, "report": report.as_dict()}
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote sweep report to {args.report}")
+
+
+def _digest(ev) -> str:
+    from repro.core.sweep import _DESIGN_FIELDS
+
+    h = hashlib.sha256()
+    for f in _DESIGN_FIELDS:
+        h.update(np.ascontiguousarray(getattr(ev, f)).tobytes())
+    return h.hexdigest()[:16]
 
 space = DesignSpace(
     rows=(16, 32),
@@ -38,7 +95,26 @@ a_h, a_v, stats = measured_design_activities(grid, layers, return_stats=True)
 print(f"measured {len(layers)} layers via {stats.jobs} profiling jobs "
       f"({stats.passes} device passes, {stats.cache_hits} cache hits)")
 
-ev = evaluate_design_space(grid, a_h, a_v)
+if sweep is None:
+    ev = evaluate_design_space(grid, a_h, a_v)
+else:
+    from repro.core.sweep import SweepInterrupted
+
+    try:
+        ev = evaluate_design_space(grid, a_h, a_v, sweep=sweep)
+    except SweepInterrupted as stop:
+        # the kill -9 stand-in: committed chunks survive in the store;
+        # rerunning with the same --store picks up exactly where this left off
+        print(f"\ninterrupted on purpose: {stop}")
+        print(f"partial sweep: {stop.report.summary()}")
+        _write_report(stop.report)
+        sys.exit(0)
+    rep = ev.sweep_report
+    print(f"sweep: {rep.summary()}")
+    if args.resume and rep.chunks_resumed == 0:
+        sys.exit("--resume: no chunks were served from the store")
+    _write_report(rep, _digest(ev))
+    print(f"results digest: {_digest(ev)}")
 # Throughput-aware frontier: bus energy per MAC (small arrays win — narrower
 # accumulators) vs MACs/cycle (big arrays win) vs worst-case regret.
 mask = ev.pareto(("bus_energy_per_mac_j", "neg_macs_per_cycle", "max_regret"))

@@ -10,6 +10,15 @@ Design points for the 1000-node posture:
 
 numpy .npy is the storage format (no orbax in this container); the manager's
 API mirrors orbax's CheckpointManager so swapping backends is mechanical.
+
+Scope note: this manager checkpoints STEP-INDEXED train state (a mutable
+pytree evolving through time, restored by recency).  The design-space sweep
+runner (``core.sweep``) deliberately does NOT reuse it: sweep chunks are
+idempotent pure functions of their key, so they live in the
+content-addressed ``core.store.ContentStore`` (resume = key lookup, no
+step ordering, no keep-K).  The two share the atomic-write primitive —
+``core.store.atomic_write_bytes`` below — which is the piece of this
+module's seed machinery that generalized.
 """
 
 from __future__ import annotations
@@ -22,6 +31,8 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from repro.core.store import atomic_write_bytes
 
 
 def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -60,11 +71,9 @@ class CheckpointManager:
             manifest["leaves"].append(
                 {"key": key, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
             )
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        # fsync the manifest then atomically commit the directory
-        fd = os.open(tmp / "manifest.json", os.O_RDONLY)
-        os.fsync(fd)
-        os.close(fd)
+        # manifest lands via tmp+fsync+replace (shared crash-safe primitive),
+        # then the whole directory commits atomically via rename
+        atomic_write_bytes(tmp / "manifest.json", json.dumps(manifest).encode())
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)

@@ -447,6 +447,7 @@ class DesignSpaceEval:
     area_um2: np.ndarray  # (P,) total PE array area
     bus_energy_per_mac_j: np.ndarray  # (P,) robust bus power / (R C f)
     neg_macs_per_cycle: np.ndarray  # (P,) -(R C): minimize == max throughput
+    sweep_report: object | None = None  # SweepReport when run via ``sweep=``
 
     @property
     def n_points(self) -> int:
@@ -489,6 +490,7 @@ def evaluate_design_space(
     cfg: EnergyModelConfig = EnergyModelConfig(),
     use_jit: bool | None = None,
     gss_iters: int = 64,
+    sweep=None,
 ) -> DesignSpaceEval:
     """Evaluate every design point of ``grid`` against a workload axis.
 
@@ -498,6 +500,13 @@ def evaluate_design_space(
     (default: uniform).  Runs as one jitted jax program when jax is
     available (float32; pass ``use_jit=False`` for the float64 numpy path —
     same code, same results up to float32 rounding).
+
+    ``sweep`` (a ``repro.core.sweep.SweepConfig``) routes evaluation
+    through the chunked, checkpointed, guard-validated runner: the point
+    axis is split into fixed-shape chunks, each committed to a crash-safe
+    content-addressed store and validated against physical contracts and
+    scalar-oracle cross-checks; a killed sweep resumes bit-identically.
+    The returned eval carries the machine-readable ``sweep_report``.
     """
     p = grid.n_points
     a_h, a_v = _norm_activities(a_h, a_v, p)
@@ -513,6 +522,14 @@ def evaluate_design_space(
     use_jit = _HAS_JAX if use_jit is None else use_jit
     if use_jit and not _HAS_JAX:
         raise RuntimeError("use_jit=True but jax is not importable")
+    if sweep is not None:
+        from repro.core.sweep import run_design_sweep
+
+        out, report = run_design_sweep(
+            grid, a_h, a_v, w, cfg=cfg, gss_iters=gss_iters, use_jit=use_jit,
+            sweep=sweep,
+        )
+        return DesignSpaceEval(grid=grid, sweep_report=report, **out)
     apply_bi = bool(np.any(grid.bus_invert))
     fn = (
         _jitted_eval(gss_iters, apply_bi)
@@ -633,6 +650,12 @@ def pareto_mask(objectives: np.ndarray, chunk: int = 1024) -> np.ndarray:
     one; the mask keeps exactly the non-dominated rows (duplicates of a
     non-dominated row are all kept — neither dominates the other).
 
+    Non-finite rows (any NaN or +/-Inf objective) are EXCLUDED: they never
+    join the frontier and never dominate anyone.  A poisoned cell (a NaN
+    leaking out of an evaluator) must not be able to corrupt — or crash —
+    the frontier extraction; NaN comparisons are False-poison under the
+    dominance tests, so exclusion is the only safe semantics.
+
     O(n * frontier) rather than O(n^2): rows are processed in lexicographic
     order (a dominator always sorts no later than its victim), compared in
     vectorized chunks against the accumulated frontier, and only surviving
@@ -646,8 +669,12 @@ def pareto_mask(objectives: np.ndarray, chunk: int = 1024) -> np.ndarray:
     n = obj.shape[0]
     if n == 0:
         return np.zeros(0, bool)
-    if not np.isfinite(obj).all():
-        raise ValueError("objectives must be finite")
+    finite = np.isfinite(obj).all(axis=1)
+    if not finite.all():
+        mask = np.zeros(n, bool)
+        if finite.any():
+            mask[finite] = pareto_mask(obj[finite], chunk)
+        return mask
     order = np.lexsort(obj.T[::-1])  # sort by column 0, then 1, ...
     srt = obj[order]
     keep = np.ones(n, bool)

@@ -7,44 +7,21 @@ examples, and benchmarks stop re-profiling workloads any previous run has
 measured (cold-start ``benchmarks/run.py --smoke`` against a warm store
 does zero profiling compute).
 
-Design constraints, in priority order:
-
-  1. **Never corrupt, never crash.**  Writes are atomic (temp file in the
-     same directory + ``os.replace``); a process killed mid-write leaves
-     only a temp file the next writer ignores, never a torn entry.  Reads
-     verify a per-entry sha256 over the payload bytes; entries that fail
-     verification (bit rot, torn bytes from pre-atomic tooling, tampering)
-     are QUARANTINED — moved aside for forensics, counted, and reported as
-     a miss so the caller recomputes and overwrites.  No store failure mode
-     propagates: a broken disk degrades to compute, exactly like a cold
-     cache.
-  2. **Versioned keys.**  Entries live under a schema-version directory
-     that tracks the in-memory key schema (currently ``v4``); a key-schema
-     bump orphans old entries rather than mis-serving them.
-  3. **Bounded size.**  ``max_bytes`` caps the store; eviction is
-     LRU-by-mtime (reads touch their entry), oldest first.
-
-Layout::
-
-    <root>/<version>/<kk>/<keyhex>.json      kk = first key byte (fan-out)
-    <root>/<version>/quarantine/<keyhex>.json
-    <root>/<version>/.tmp-<pid>-<nonce>      in-flight writes
-
-Entry format: JSON ``{"v", "sha256", "payload"}`` where ``sha256`` is over
-the canonical (sorted-keys) JSON encoding of ``payload``.  JSON keeps
-entries inspectable with a text editor during an incident — profiles are a
-handful of scalars plus optional per-lane count vectors, so binary
-compactness buys nothing.
+The crash-safety machinery (atomic tmp+fsync+rename writes, per-entry
+sha256 verification, quarantine-on-corruption, LRU-by-mtime eviction) lives
+in the generic ``core.store.ContentStore`` — shared with the design-space
+sweep chunk store (``core.sweep``) — and this module only adds the
+``ActivityProfile`` encode/decode on top.  The on-disk format is unchanged
+from the pre-refactor store (same ``{"v", "sha256", "payload"}`` entries
+under the same ``v4`` version directory), so existing warm stores keep
+serving.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import json
-import os
-import secrets
-import threading
+
+from repro.core.store import _DEFAULT_MAX_BYTES, ContentStore
 
 __all__ = ["ProfileStore", "STORE_VERSION"]
 
@@ -53,15 +30,9 @@ __all__ = ["ProfileStore", "STORE_VERSION"]
 # entries here too.
 STORE_VERSION = "v4"
 
-_DEFAULT_MAX_BYTES = 256 << 20  # 256 MiB ~ hundreds of thousands of entries
 
-
-def _canonical_payload(payload: dict) -> bytes:
-    return json.dumps(payload, sort_keys=True, separators=(",", ":")).encode()
-
-
-class ProfileStore:
-    """One on-disk store rooted at ``path`` (created on first use).
+class ProfileStore(ContentStore):
+    """One on-disk profile store rooted at ``path`` (created on first use).
 
     Thread-safe; every method is total (no exception escapes a ``get`` or
     ``put`` — the worst outcome is a counted miss or a dropped write).
@@ -69,71 +40,29 @@ class ProfileStore:
 
     def __init__(
         self,
-        path: str | os.PathLike,
+        path,
         *,
         max_bytes: int = _DEFAULT_MAX_BYTES,
         version: str = STORE_VERSION,
     ):
-        self.root = os.fspath(path)
-        self.version = version
-        self.max_bytes = int(max_bytes)
-        self.stats = {
-            "hits": 0,
-            "misses": 0,
-            "puts": 0,
-            "evictions": 0,
-            "integrity_failures": 0,
-            "io_errors": 0,
-        }
-        self._lock = threading.Lock()
-        self._approx_bytes: int | None = None  # lazily scanned
-        self._quarantine_events: list[str] = []  # key hexes, drained by readers
+        super().__init__(
+            path, version=version, max_bytes=max_bytes, corrupt_site="store-read"
+        )
 
-    # -- paths ---------------------------------------------------------------
-
-    @property
-    def _vdir(self) -> str:
-        return os.path.join(self.root, self.version)
-
-    @property
-    def quarantine_dir(self) -> str:
-        return os.path.join(self._vdir, "quarantine")
-
-    def entry_path(self, key: bytes) -> str:
-        hexkey = key.hex()
-        return os.path.join(self._vdir, hexkey[:2], hexkey + ".json")
-
-    def _count(self, stat: str, n: int = 1) -> None:
-        with self._lock:
-            self.stats[stat] += n
-
-    # -- encode / decode -----------------------------------------------------
+    # -- profile payload codec ----------------------------------------------
 
     @staticmethod
-    def _encode(profile) -> bytes:
+    def _to_payload(profile) -> dict:
         payload = dataclasses.asdict(profile)
         for lane_field in ("h_lane_toggles", "v_lane_toggles"):
             if payload.get(lane_field) is not None:
                 payload[lane_field] = list(payload[lane_field])
-        body = _canonical_payload(payload)
-        doc = {
-            "v": STORE_VERSION,
-            "sha256": hashlib.sha256(body).hexdigest(),
-            "payload": payload,
-        }
-        return json.dumps(doc, sort_keys=True).encode()
+        return payload
 
-    def _decode(self, raw: bytes):
-        """Verified ActivityProfile, or raise (caller quarantines)."""
+    @staticmethod
+    def _from_payload(payload: dict):
         from repro.core.switching import ActivityProfile
 
-        doc = json.loads(raw)
-        if doc["v"] != self.version:
-            raise ValueError(f"entry version {doc['v']!r} != {self.version!r}")
-        payload = doc["payload"]
-        digest = hashlib.sha256(_canonical_payload(payload)).hexdigest()
-        if digest != doc["sha256"]:
-            raise ValueError("payload sha256 mismatch")
         for lane_field in ("h_lane_toggles", "v_lane_toggles"):
             if payload.get(lane_field) is not None:
                 payload[lane_field] = tuple(int(v) for v in payload[lane_field])
@@ -143,186 +72,19 @@ class ProfileStore:
 
     def get(self, key: bytes):
         """Verified profile for ``key``, or None (miss / quarantined)."""
-        path = self.entry_path(key)
-        try:
-            with open(path, "rb") as f:
-                raw = f.read()
-        except FileNotFoundError:
-            self._count("misses")
+        payload = self.get_payload(key)
+        if payload is None:
             return None
-        except OSError:
-            self._count("io_errors")
-            self._count("misses")
-            return None
-
-        from repro.runtime import faults
-
-        inj = faults.active()
-        if inj is not None:
-            raw = inj.maybe_corrupt(raw, "store-read", key.hex()[:16])
-
         try:
-            profile = self._decode(raw)
+            return self._from_payload(payload)
         except Exception:
-            self._quarantine(key, path, raw)
+            # A sha-valid entry that no longer decodes (schema drift inside
+            # the same version) is as unusable as a corrupt one: quarantine
+            # semantics without the file move — count and miss.
             self._count("integrity_failures")
             self._count("misses")
             return None
-        try:
-            os.utime(path)  # LRU recency
-        except OSError:
-            pass
-        self._count("hits")
-        return profile
 
     def put(self, key: bytes, profile) -> bool:
-        """Atomically persist ``profile`` under ``key``; True on success.
-
-        Crash-safe by construction: the entry becomes visible only via the
-        final ``os.replace`` — a writer killed at ANY earlier point leaves
-        the previous entry (if any) untouched and at most a stray temp
-        file.  I/O failures are counted and swallowed (a full disk must
-        degrade to compute-only, not abort a workload).
-        """
-        path = self.entry_path(key)
-        tmp = os.path.join(
-            self._vdir, f".tmp-{os.getpid()}-{secrets.token_hex(8)}"
-        )
-        try:
-            raw = self._encode(profile)
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-            with open(tmp, "wb") as f:
-                f.write(raw)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)
-        except OSError:
-            self._count("io_errors")
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            return False
-        self._count("puts")
-        with self._lock:
-            if self._approx_bytes is not None:
-                self._approx_bytes += len(raw)
-        self._evict_if_needed()
-        return True
-
-    def drain_quarantine_events(self) -> list[str]:
-        """Key hexes quarantined since the last drain (failure reporting)."""
-        with self._lock:
-            out, self._quarantine_events = self._quarantine_events, []
-        return out
-
-    def _quarantine(self, key: bytes, path: str, raw: bytes) -> None:
-        """Move a failed-verification entry aside; never raise."""
-        with self._lock:
-            self._quarantine_events.append(key.hex())
-        try:
-            os.makedirs(self.quarantine_dir, exist_ok=True)
-            os.replace(
-                path, os.path.join(self.quarantine_dir, os.path.basename(path))
-            )
-        except OSError:
-            try:
-                os.unlink(path)
-            except OSError:
-                pass
-
-    # -- size bound ----------------------------------------------------------
-
-    def _scan(self) -> list[tuple[float, int, str]]:
-        """(mtime, size, path) for every live entry; also refreshes the
-        approximate byte total and sweeps stale temp files."""
-        out = []
-        total = 0
-        try:
-            shards = os.listdir(self._vdir)
-        except OSError:
-            shards = []
-        for shard in shards:
-            sdir = os.path.join(self._vdir, shard)
-            if shard.startswith(".tmp-"):
-                try:  # stray temp from a crashed writer: sweep
-                    os.unlink(sdir)
-                except OSError:
-                    pass
-                continue
-            if shard == "quarantine" or not os.path.isdir(sdir):
-                continue
-            try:
-                names = os.listdir(sdir)
-            except OSError:
-                continue
-            for name in names:
-                p = os.path.join(sdir, name)
-                try:
-                    st = os.stat(p)
-                except OSError:
-                    continue
-                out.append((st.st_mtime, st.st_size, p))
-                total += st.st_size
-        with self._lock:
-            self._approx_bytes = total
-        return out
-
-    def _evict_if_needed(self) -> None:
-        with self._lock:
-            approx = self._approx_bytes
-        if approx is not None and approx <= self.max_bytes:
-            return
-        entries = self._scan()
-        total = sum(size for _, size, _ in entries)
-        if total <= self.max_bytes:
-            return
-        evicted = 0
-        for _, size, p in sorted(entries):  # oldest mtime first
-            if total <= self.max_bytes:
-                break
-            try:
-                os.unlink(p)
-            except OSError:
-                continue
-            total -= size
-            evicted += 1
-        with self._lock:
-            self._approx_bytes = total
-            self.stats["evictions"] += evicted
-
-    # -- introspection -------------------------------------------------------
-
-    def entries(self) -> list[str]:
-        """Paths of every live entry (tests / incident tooling)."""
-        return sorted(p for _, _, p in self._scan())
-
-    def quarantined(self) -> list[str]:
-        try:
-            return sorted(
-                os.path.join(self.quarantine_dir, n)
-                for n in os.listdir(self.quarantine_dir)
-            )
-        except OSError:
-            return []
-
-    def info(self) -> dict:
-        with self._lock:
-            stats = dict(self.stats)
-        return {
-            "path": self.root,
-            "version": self.version,
-            "max_bytes": self.max_bytes,
-            "entries": len(self.entries()),
-            **stats,
-        }
-
-    def clear(self) -> None:
-        """Delete every entry (incl. quarantine); keep the directories."""
-        for p in self.entries() + self.quarantined():
-            try:
-                os.unlink(p)
-            except OSError:
-                pass
-        with self._lock:
-            self._approx_bytes = 0
+        """Atomically persist ``profile`` under ``key``; True on success."""
+        return self.put_payload(key, self._to_payload(profile))

@@ -1,0 +1,1207 @@
+"""Checkpointed, self-validating execution of design-space/layout sweeps.
+
+The exploration engines (``core.design_space.evaluate_design_space``,
+``layout.power.evaluate_layout_space``) evaluate their whole grid in one
+program: fast, but a multi-hour sweep that dies at 80% restarts from zero,
+and a silently wrong cell (a NaN, a jit/closed-form divergence) corrupts
+the Pareto frontier with no error at all.  This module is the resilience
+layer between those engines and their callers — both gain a ``sweep=``
+keyword that routes evaluation through here.
+
+Chunking & resume
+-----------------
+The point axis P is split into deterministic fixed-shape chunks of
+``SweepConfig.chunk_size`` (the last chunk clamp-pads by repeating the
+final point, so every chunk traces to ONE compiled program).  Chunking
+along P is mathematically safe: every engine reduction runs along the
+workload axis W, never across points.  Each completed chunk is committed to
+a crash-safe content-addressed ``core.store.ContentStore`` (atomic
+tmp+fsync+rename, per-entry sha256, quarantine-on-corruption — the exact
+machinery the profile store uses) under
+``sha256(spec | chunk_index)``, where the spec digest covers every input
+that determines the chunk's bytes (grid arrays, activities, weights,
+config, gss iterations, chunk size, starting rung).  A killed sweep
+re-keyed over the same inputs serves completed chunks from the store —
+the stored arrays round-trip as raw dtype+shape+base64 bytes, so a
+resumed run reproduces the uninterrupted run BIT-identically (JSON float
+text could not: it cannot even represent a NaN payload).
+
+Validation & degradation
+------------------------
+Every chunk (freshly evaluated or resumed) passes a guard harness before
+it is accepted:
+
+  * physical contracts — all fields finite; powers positive where activity
+    is; coded activity <= raw; savings <= 1; argmin aspects inside the
+    envelope; infeasible layout cells priced ``inf`` and only those;
+  * cross-engine agreement — the batched golden-section argmin against the
+    closed-form Eq. 6 optimum (f64 power-shape comparison), and a seeded
+    random sample of cells re-derived through the SCALAR oracles
+    (``optimize.bus_invert_activity``, ``floorplan.bus_power``,
+    ``layout.power.segment_bus_power``) at rung-appropriate tolerances.
+
+A violated chunk raises a typed ``GuardViolationError`` /
+``CrossEngineMismatchError`` (``runtime.resilience`` taxonomy) and is
+re-evaluated down the ``jit -> eager -> scalar`` ladder
+(``resilience.evaluation_ladder``): same math in float64 numpy, then
+per-point scalar evaluation with nothing batched that could smear one bad
+cell into its neighbors.  Every event lands in the machine-readable
+``SweepReport`` (chunk records + a ``resilience.FailureReport``).
+
+Fault tolerance
+---------------
+Fresh jit chunks are sharded round-robin across ``jax.local_devices()``;
+a dispatch-class failure (timeout, device loss) evicts the device through
+``runtime.health.HealthMonitor`` and resubmits the chunk once to a
+survivor — the same semantics the profiling pipeline uses.  Evaluator-site
+fault hooks (``runtime.faults``: backend raise, hang, device loss, NaN/Inf
+poison, chunk-store bitflip, commit-boundary abort) let chaos CI prove
+every one of these paths actually runs.
+"""
+
+from __future__ import annotations
+
+import base64
+import contextlib
+import dataclasses
+import hashlib
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.store import ContentStore
+from repro.runtime import faults
+from repro.runtime.health import HealthMonitor
+from repro.runtime.resilience import (
+    BackendCompileError,
+    CacheCorruptionError,
+    ContractViolationError,
+    CrossEngineMismatchError,
+    DeviceDispatchError,
+    EvaluationError,
+    FailureReport,
+    GuardViolationError,
+    ProfileError,
+    RetryPolicy,
+    call_with_retry,
+    classify_exception,
+    evaluation_ladder,
+)
+
+__all__ = [
+    "SweepConfig",
+    "ChunkRecord",
+    "SweepReport",
+    "SweepInterrupted",
+    "SWEEP_STORE_VERSION",
+    "run_design_sweep",
+    "run_layout_sweep",
+]
+
+# Chunk-store key schema version: a bump orphans old chunks rather than
+# mis-serving them (same rule the profile store follows).
+SWEEP_STORE_VERSION = "sweep-v1"
+
+# The exact output field sets of the two engines — chunk payloads carry all
+# of them, and a stored chunk missing (or growing) a field fails decode.
+_DESIGN_FIELDS = (
+    "a_v_eff",
+    "aspect_opt",
+    "aspect_opt_gss",
+    "bus_power_opt",
+    "bus_power_sym",
+    "aspect_robust",
+    "max_regret",
+    "bus_power_robust",
+    "bus_power_square",
+    "interconnect_saving",
+    "total_saving",
+    "area_um2",
+    "bus_energy_per_mac_j",
+    "neg_macs_per_cycle",
+)
+_LAYOUT_FIELDS = (
+    "feasible",
+    "aspect_lo",
+    "aspect_hi",
+    "aspect_opt",
+    "bus_power_opt",
+    "aspect_robust",
+    "bus_power_robust",
+    "overhead_w",
+    "wirelength_um",
+)
+
+# Chunks are pure compute (no device queue contention like profiling), so
+# the default retry budget is small and fast.
+_DEFAULT_RETRY = RetryPolicy(max_attempts=2, base_delay_s=0.01, max_delay_s=0.1)
+
+_ON_VIOLATION = ("degrade", "raise")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Knobs of the chunked sweep runner (``sweep=`` on the evaluators).
+
+    ``store`` is a directory path or a ``ContentStore``; ``None`` runs
+    chunked + validated but unpersisted.  ``max_chunks`` bounds how many
+    PENDING chunks this call evaluates (the kill-and-resume test harness:
+    a truncated sweep raises ``SweepInterrupted`` after committing them).
+    ``on_violation="degrade"`` walks a guard-violating chunk down the
+    jit -> eager -> scalar ladder; ``"raise"`` surfaces the first violation.
+    ``oracle_cells`` is the per-chunk scalar-oracle sample size (0 keeps
+    only the vectorized contract guards).  ``timeout_s`` bounds one chunk's
+    device round-trip (default ``$REPRO_SWEEP_TIMEOUT_S``, else unbounded);
+    ``devices``/``health`` override device discovery and the eviction
+    monitor (tests inject simulated fleets).
+    """
+
+    chunk_size: int = 256
+    store: object | None = None
+    resume: bool = True
+    validate: bool = True
+    oracle_cells: int = 4
+    seed: int = 0
+    max_chunks: int | None = None
+    on_violation: str = "degrade"
+    timeout_s: float | None = None
+    retry: RetryPolicy | None = None
+    devices: tuple | None = None
+    health: object | None = None
+
+    def __post_init__(self):
+        if int(self.chunk_size) < 1:
+            raise ContractViolationError("chunk_size must be >= 1")
+        if self.on_violation not in _ON_VIOLATION:
+            raise ContractViolationError(
+                f"on_violation must be one of {_ON_VIOLATION}"
+            )
+        if self.max_chunks is not None and int(self.max_chunks) < 1:
+            raise ContractViolationError("max_chunks must be >= 1 (or None)")
+
+
+@dataclasses.dataclass
+class ChunkRecord:
+    """Per-chunk outcome: where its points came from and on which rung."""
+
+    index: int
+    points: int
+    status: str  # "evaluated" | "resumed"
+    rung: str  # evaluation rung that produced the accepted result
+    guard: str  # "pass" | "skipped"
+    attempts: int = 1
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """Machine-readable account of one chunked sweep.
+
+    ``records`` has one ``ChunkRecord`` per chunk (in index order);
+    ``failures`` is the shared ``resilience.FailureReport`` vocabulary —
+    every retry, degradation, eviction, quarantine, and raise is a typed
+    record, so chaos CI can assert zero silent corruptions by set-matching
+    injected faults against it.
+    """
+
+    kind: str
+    n_points: int
+    chunk_size: int
+    chunks_total: int
+    chunks_evaluated: int = 0
+    chunks_resumed: int = 0
+    chunks_quarantined: int = 0
+    guard_checks: int = 0
+    guard_failures: int = 0
+    resubmits: int = 0
+    records: list = dataclasses.field(default_factory=list)
+    failures: FailureReport = dataclasses.field(default_factory=FailureReport)
+
+    def rung_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for r in self.records:
+            out[r.rung] = out.get(r.rung, 0) + 1
+        return out
+
+    def guard_verdicts(self) -> dict[str, int]:
+        """{"pass": n, "skipped": n, "fail": n} — fails counted from the
+        guard_failures tally (a failed check never yields a chunk record)."""
+        out = {"pass": 0, "skipped": 0, "fail": self.guard_failures}
+        for r in self.records:
+            out[r.guard] = out.get(r.guard, 0) + 1
+        return out
+
+    def summary(self) -> str:
+        rungs = ", ".join(f"{k}x{n}" for k, n in sorted(self.rung_counts().items()))
+        line = (
+            f"{self.kind} sweep: {self.n_points} points in {self.chunks_total} "
+            f"chunks of {self.chunk_size} — {self.chunks_evaluated} evaluated, "
+            f"{self.chunks_resumed} resumed, {self.chunks_quarantined} "
+            f"quarantined ({rungs or 'none'}); guards: {self.guard_checks} "
+            f"checks, {self.guard_failures} violations"
+        )
+        if self.resubmits:
+            line += f"; {self.resubmits} device resubmissions"
+        if self.failures:
+            line += f"; {self.failures.summary()}"
+        return line
+
+    def as_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "n_points": self.n_points,
+            "chunk_size": self.chunk_size,
+            "chunks_total": self.chunks_total,
+            "chunks_evaluated": self.chunks_evaluated,
+            "chunks_resumed": self.chunks_resumed,
+            "chunks_quarantined": self.chunks_quarantined,
+            "guard_checks": self.guard_checks,
+            "guard_failures": self.guard_failures,
+            "resubmits": self.resubmits,
+            "rung_counts": self.rung_counts(),
+            "guard_verdicts": self.guard_verdicts(),
+            "records": [r.as_dict() for r in self.records],
+            "failures": self.failures.as_dict(),
+        }
+
+
+class SweepInterrupted(EvaluationError):
+    """A sweep stopped early on purpose (``max_chunks``) — completed chunks
+    are committed, the partial ``SweepReport`` rides on ``.report``."""
+
+    kind = "sweep-interrupted"
+
+    def __init__(self, message: str, *, report: SweepReport, job="", stage=""):
+        super().__init__(message, job=job, stage=stage)
+        self.report = report
+
+
+# ---------------------------------------------------------------------------
+# Chunk payload codec — raw array bytes, NOT JSON floats: base64 of the
+# exact buffer round-trips every bit pattern (including a poisoned NaN on
+# its way into quarantine), which is what "resume bit-identically" means.
+# ---------------------------------------------------------------------------
+
+
+def _encode_field(arr) -> dict:
+    arr = np.ascontiguousarray(arr)
+    return {
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+        "data": base64.b64encode(arr.tobytes()).decode("ascii"),
+    }
+
+
+def _decode_field(doc: dict) -> np.ndarray:
+    arr = np.frombuffer(base64.b64decode(doc["data"]), dtype=np.dtype(doc["dtype"]))
+    return arr.reshape([int(s) for s in doc["shape"]]).copy()
+
+
+def _encode_chunk(kind: str, index: int, rung: str, out: dict) -> dict:
+    return {
+        "kind": kind,
+        "chunk": index,
+        "rung": rung,
+        "fields": {k: _encode_field(v) for k, v in out.items()},
+    }
+
+
+def _decode_chunk(payload: dict, kind: str, index: int, fields) -> tuple[dict, str]:
+    if payload.get("kind") != kind or payload.get("chunk") != index:
+        raise ValueError(
+            f"chunk entry is for {payload.get('kind')}#{payload.get('chunk')}, "
+            f"wanted {kind}#{index}"
+        )
+    docs = payload.get("fields")
+    if not isinstance(docs, dict) or set(docs) != set(fields):
+        raise ValueError("chunk entry field set does not match the engine schema")
+    return {k: _decode_field(docs[k]) for k in fields}, str(payload.get("rung", "?"))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic keying
+# ---------------------------------------------------------------------------
+
+
+def _digest(parts) -> bytes:
+    h = hashlib.sha256()
+    for tag, val in parts:
+        h.update(tag.encode())
+        h.update(b"=")
+        h.update(val if isinstance(val, bytes) else str(val).encode())
+        h.update(b";")
+    return h.digest()
+
+
+def _grid_parts(grid) -> list:
+    return [
+        ("rows", np.asarray(grid.rows, np.int64).tobytes()),
+        ("cols", np.asarray(grid.cols, np.int64).tobytes()),
+        ("b_h", np.asarray(grid.b_h, np.int64).tobytes()),
+        ("b_v", np.asarray(grid.b_v, np.int64).tobytes()),
+        ("b_v_data", np.asarray(grid.b_v_data, np.int64).tobytes()),
+        ("bus_invert", np.asarray(grid.bus_invert, np.uint8).tobytes()),
+        ("dataflow_os", np.asarray(grid.dataflow_os, np.uint8).tobytes()),
+        ("pe_area", np.asarray(grid.pe_area_um2, np.float64).tobytes()),
+        ("aspect_lo", repr(float(grid.aspect_lo))),
+        ("aspect_hi", repr(float(grid.aspect_hi))),
+    ]
+
+
+def _spec_key(kind, grid, a_h, a_v, weights, extra) -> bytes:
+    """Digest over everything that determines a chunk's bytes.  The starting
+    rung is included deliberately: jit (f32) and eager (f64) runs must not
+    share chunks — they agree to tolerance, not bit-for-bit."""
+    parts = [
+        ("store", SWEEP_STORE_VERSION),
+        ("kind", kind),
+        *_grid_parts(grid),
+        ("a_h", np.asarray(a_h, np.float64).tobytes()),
+        ("a_v", np.asarray(a_v, np.float64).tobytes()),
+        ("w", np.asarray(weights, np.float64).tobytes()),
+        *extra,
+    ]
+    return _digest(parts)
+
+
+def _chunk_key(spec: bytes, index: int) -> bytes:
+    return hashlib.sha256(spec + b"|chunk|" + str(index).encode()).digest()
+
+
+def _chunk_idx(index: int, chunk_size: int, n: int) -> np.ndarray:
+    """Point indices of chunk ``index`` — clamp-padded to ``chunk_size`` by
+    repeating the last point, so every chunk shares one compiled shape."""
+    return np.minimum(np.arange(index * chunk_size, (index + 1) * chunk_size), n - 1)
+
+
+def _chunk_points(index: int, chunk_size: int, n: int) -> int:
+    return min(chunk_size, n - index * chunk_size)
+
+
+# ---------------------------------------------------------------------------
+# Design-space engine adapter (evaluate + validate closures)
+# ---------------------------------------------------------------------------
+
+
+def _design_eval_factory(grid, a_h, a_v, w, cfg, gss_iters, apply_bi, cs, n):
+    from repro.core.design_space import _evaluate_core, _jitted_eval
+
+    rows = np.asarray(grid.rows, float)
+    cols = np.asarray(grid.cols, float)
+    b_h = np.asarray(grid.b_h, float)
+    b_v = np.asarray(grid.b_v, float)
+    b_v_data = np.asarray(grid.b_v_data, float)
+    bi = np.asarray(grid.bus_invert, bool)
+    area = np.asarray(grid.pe_area_um2, float)
+    lo, hi = float(grid.aspect_lo), float(grid.aspect_hi)
+
+    def args_for(idx):
+        return (
+            rows[idx], cols[idx], b_h[idx], b_v[idx], b_v_data[idx],
+            bi[idx], area[idx], a_h[:, idx], a_v[:, idx], w, lo, hi,
+            cfg.vdd, cfg.freq_hz, cfg.wire_cap_f_per_um,
+            cfg.non_bus_interconnect_fraction, cfg.interconnect_share_of_total,
+        )
+
+    def eval_chunk(rung, index, device=None):
+        idx = _chunk_idx(index, cs, n)
+        if rung == "jit":
+            import jax
+
+            fn = _jitted_eval(gss_iters, apply_bi)
+            ctx = (
+                jax.default_device(device)
+                if device is not None
+                else contextlib.nullcontext()
+            )
+            with ctx:
+                return {k: np.asarray(v) for k, v in fn(*args_for(idx)).items()}
+        if rung == "eager":
+            return {
+                k: np.asarray(v)
+                for k, v in _evaluate_core(
+                    *args_for(idx), gss_iters=gss_iters, apply_bi=apply_bi
+                ).items()
+            }
+        # scalar rung: one point per call — nothing batched that could smear
+        # one bad cell into its neighbors.
+        parts = [
+            _evaluate_core(
+                *args_for(idx[j : j + 1]), gss_iters=gss_iters, apply_bi=apply_bi
+            )
+            for j in range(len(idx))
+        ]
+        return {
+            k: np.concatenate([np.asarray(p[k]) for p in parts], axis=-1)
+            for k in parts[0]
+        }
+
+    return eval_chunk
+
+
+def _design_validate_factory(
+    grid, a_h, a_v, w, cfg, spec, oracle_cells, oracle_seed, cs, n
+):
+    from repro.core.floorplan import BusActivity, bus_power, optimal_aspect_power_arr
+    from repro.core.optimize import _power_shape, bus_invert_activity
+
+    b_h = np.asarray(grid.b_h, float)
+    b_v = np.asarray(grid.b_v, float)
+    b_v_data = np.asarray(grid.b_v_data, np.int64)
+    bi = np.asarray(grid.bus_invert, bool)
+    lo, hi = float(grid.aspect_lo), float(grid.aspect_hi)
+    has_one = lo <= 1.0 <= hi  # the square layout is inside the envelope
+
+    def validate(out, index, rung):
+        idx = _chunk_idx(index, cs, n)
+        # "stored" chunks (and fresh jit chunks) are float32 engine output;
+        # eager/scalar rungs are float64 and held to much tighter tolerances.
+        loose = rung in ("jit", "stored")
+        eps = 1e-4 if loose else 1e-8
+        eps_a = 1e-5 if loose else 1e-9  # envelope slack (f32 clamp rounding)
+        v: list[str] = []
+
+        missing = [f for f in _DESIGN_FIELDS if f not in out]
+        if missing:
+            return [f"missing fields {missing}"]
+        for f in _DESIGN_FIELDS:
+            if not np.isfinite(np.asarray(out[f], float)).all():
+                v.append(f"non-finite values in {f}")
+        if v:
+            return v  # every further check is meaningless on NaN/Inf
+
+        ave = np.asarray(out["a_v_eff"], float)
+        avs = a_v[:, idx]
+        ahs = a_h[:, idx]
+        bi_c = bi[idx]
+        if (ave < -eps).any() or (ave > 1 + eps).any():
+            v.append("a_v_eff outside [0, 1]")
+        if bi_c.any() and (ave[:, bi_c] > avs[:, bi_c] + 1e-6 + eps).any():
+            v.append("coded activity exceeds raw (a_v_eff > a_v on BI points)")
+        unc = ~bi_c
+        if unc.any() and (
+            np.abs(ave[:, unc] - avs[:, unc]) > 1e-6 + eps * np.abs(avs[:, unc])
+        ).any():
+            v.append("a_v_eff differs from a_v on uncoded points")
+
+        for f in ("aspect_opt", "aspect_opt_gss"):
+            a = np.asarray(out[f], float)
+            if (a < lo * (1 - eps_a)).any() or (a > hi * (1 + eps_a)).any():
+                v.append(f"{f} outside the aspect envelope [{lo}, {hi}]")
+        ar = np.asarray(out["aspect_robust"], float)
+        if (ar < lo * (1 - eps_a)).any() or (ar > hi * (1 + eps_a)).any():
+            v.append("aspect_robust outside the aspect envelope")
+
+        tiny = 1e-30
+        active_wp = ahs + np.maximum(ave, 0.0) > 1e-6  # (W, P)
+        active_p = (w[:, None] * (ahs + np.maximum(ave, 0.0))).sum(0) > 1e-6
+        for f, active in (
+            ("bus_power_opt", active_wp),
+            ("bus_power_sym", active_wp),
+            ("bus_power_robust", active_p),
+            ("bus_power_square", active_p),
+        ):
+            p = np.asarray(out[f], float)
+            if (p < -tiny).any():
+                v.append(f"negative power in {f}")
+            elif (p[active] <= 0).any():
+                v.append(f"zero power in {f} on cells with switching activity")
+
+        if (np.asarray(out["max_regret"], float) < -eps).any():
+            v.append("negative worst-case regret")
+        for f in ("interconnect_saving", "total_saving"):
+            if (np.asarray(out[f], float) > 1 + eps).any():
+                v.append(f"{f} exceeds 1")
+        if (np.asarray(out["area_um2"], float) <= 0).any():
+            v.append("non-positive area")
+        if has_one:
+            # aspect_opt minimizes per-(workload, point) power over an
+            # envelope containing the square layout, so it can never lose
+            # to it.  (No analogous bound holds for interconnect_saving:
+            # aspect_robust minimizes minimax REGRET, not weighted power.)
+            p_opt = np.asarray(out["bus_power_opt"], float)
+            p_sym = np.asarray(out["bus_power_sym"], float)
+            if (p_opt > p_sym * (1 + 10 * eps) + tiny).any():
+                v.append("bus_power_opt exceeds the square layout's power")
+
+        # Cross-engine: the batched golden-section argmin must agree with
+        # the closed-form Eq. 6 optimum — compared through the f64 power
+        # shape at each aspect (aspect comparison is ill-conditioned: the
+        # minimum is flat).
+        rtol_gss = 1e-4 if loose else 1e-6
+        ao = np.asarray(out["aspect_opt"], float)
+        ag = np.asarray(out["aspect_opt_gss"], float)
+        bh_c, bv_c = b_h[idx], b_v[idx]
+        ave_cl = np.clip(ave, 0.0, 1.0)
+        p_cf = _power_shape(bh_c, bv_c, ahs, ave_cl, ao, np)
+        p_gs = _power_shape(bh_c, bv_c, ahs, ave_cl, ag, np)
+        denom = np.maximum(np.minimum(p_cf, p_gs), tiny)
+        if (np.abs(p_cf - p_gs) > rtol_gss * denom + tiny).any():
+            v.append(
+                "cross-engine:gss-vs-closed-form optimal aspects disagree "
+                f"(rtol {rtol_gss})"
+            )
+
+        # Cross-engine: seeded random cells re-derived through the scalar
+        # API (float64, no batching, no jit) — the oracle of last resort.
+        if oracle_cells > 0:
+            rtol = 2e-3 if loose else 1e-6
+            n_w = a_h.shape[0]
+            for t in range(oracle_cells):
+                h = hashlib.sha256(
+                    spec + f"|oracle|{oracle_seed}|{index}|{t}".encode()
+                ).digest()
+                wi = int.from_bytes(h[:4], "big") % n_w
+                j = int.from_bytes(h[4:8], "big") % len(idx)
+                pj = int(idx[j])
+                ah_s, av_s = float(a_h[wi, pj]), float(a_v[wi, pj])
+                ave_ref = (
+                    bus_invert_activity(av_s, int(b_v_data[pj]))
+                    if bi[pj]
+                    else av_s
+                )
+                cell = f"[{wi},{pj}]"
+                if abs(float(ave[wi, j]) - ave_ref) > rtol * max(ave_ref, 1e-9) + 1e-7:
+                    v.append(f"cross-engine:a_v_eff{cell} vs scalar bus_invert_activity")
+                opt_ref = float(
+                    optimal_aspect_power_arr(
+                        b_h[pj], b_v[pj], ah_s, ave_ref, lo=lo, hi=hi, xp=np
+                    )
+                )
+                if abs(float(ao[wi, j]) - opt_ref) > rtol * opt_ref + 1e-7:
+                    v.append(f"cross-engine:aspect_opt{cell} vs scalar Eq. 6")
+                p_ref = bus_power(
+                    grid.geometry(pj),
+                    BusActivity(ah_s, min(max(ave_ref, 0.0), 1.0)),
+                    opt_ref,
+                    vdd=cfg.vdd,
+                    freq_hz=cfg.freq_hz,
+                    wire_cap_f_per_um=cfg.wire_cap_f_per_um,
+                )
+                got_p = float(np.asarray(out["bus_power_opt"], float)[wi, j])
+                if abs(got_p - p_ref) > rtol * max(p_ref, tiny):
+                    v.append(f"cross-engine:bus_power_opt{cell} vs scalar bus_power")
+        return v
+
+    return validate
+
+
+# ---------------------------------------------------------------------------
+# Layout engine adapter
+# ---------------------------------------------------------------------------
+
+
+def _layout_eval_factory(
+    grid, a_h, a_v, layouts, h_lanes, v_lanes, w, cfg, gss_iters, cs, n
+):
+    def run(sub_idx, use_jit):
+        from repro.layout.power import evaluate_layout_space
+
+        ev = evaluate_layout_space(
+            grid.select(sub_idx),
+            a_h[:, sub_idx],
+            a_v[:, sub_idx],
+            layouts=layouts,
+            h_lanes=None if h_lanes is None else h_lanes[:, sub_idx, :],
+            v_lanes=None if v_lanes is None else v_lanes[:, sub_idx, :],
+            weights=w,
+            cfg=cfg,
+            use_jit=use_jit,
+            gss_iters=gss_iters,
+        )
+        return {f: np.asarray(getattr(ev, f)) for f in _LAYOUT_FIELDS}
+
+    def eval_chunk(rung, index, device=None):
+        idx = _chunk_idx(index, cs, n)
+        if rung == "jit":
+            import jax
+
+            ctx = (
+                jax.default_device(device)
+                if device is not None
+                else contextlib.nullcontext()
+            )
+            with ctx:
+                return run(idx, True)
+        if rung == "eager":
+            return run(idx, False)
+        parts = [run(idx[j : j + 1], False) for j in range(len(idx))]
+        return {
+            f: np.concatenate([p[f] for p in parts], axis=-1) for f in _LAYOUT_FIELDS
+        }
+
+    return eval_chunk
+
+
+def _layout_validate_factory(
+    grid, a_h, a_v, layouts, h_lanes, v_lanes, w, cfg, spec, oracle_cells,
+    oracle_seed, cs, n,
+):
+    def validate(out, index, rung):
+        idx = _chunk_idx(index, cs, n)
+        loose = rung in ("jit", "stored")
+        eps_a = 1e-5 if loose else 1e-9
+        tiny = 1e-30
+        v: list[str] = []
+
+        missing = [f for f in _LAYOUT_FIELDS if f not in out]
+        if missing:
+            return [f"missing fields {missing}"]
+        feas = np.asarray(out["feasible"], bool)
+        infeas = ~feas
+        for f in ("bus_power_robust", "overhead_w", "wirelength_um"):
+            arr = np.asarray(out[f], float)
+            if np.isnan(arr).any():
+                v.append(f"NaN values in {f}")
+                continue
+            if infeas.any() and not np.isinf(arr[infeas]).all():
+                v.append(f"{f} finite on infeasible cells")
+            if feas.any() and not np.isfinite(arr[feas]).all():
+                v.append(f"{f} non-finite on feasible cells")
+        po = np.asarray(out["bus_power_opt"], float)
+        if np.isnan(po).any():
+            v.append("NaN values in bus_power_opt")
+        else:
+            if infeas.any() and not np.isinf(po[:, infeas]).all():
+                v.append("bus_power_opt finite on infeasible cells")
+            if feas.any() and not np.isfinite(po[:, feas]).all():
+                v.append("bus_power_opt non-finite on feasible cells")
+        for f in ("aspect_lo", "aspect_hi", "aspect_opt", "aspect_robust"):
+            if not np.isfinite(np.asarray(out[f], float)).all():
+                v.append(f"non-finite values in {f}")
+        if v:
+            return v
+
+        alo = np.asarray(out["aspect_lo"], float)
+        ahi = np.asarray(out["aspect_hi"], float)
+        ao = np.asarray(out["aspect_opt"], float)
+        ar = np.asarray(out["aspect_robust"], float)
+        bad = feas[None] & ((ao < alo[None] * (1 - eps_a)) | (ao > ahi[None] * (1 + eps_a)))
+        if bad.any():
+            v.append("aspect_opt outside the per-cell aspect window")
+        bad = feas & ((ar < alo * (1 - eps_a)) | (ar > ahi * (1 + eps_a)))
+        if bad.any():
+            v.append("aspect_robust outside the per-cell aspect window")
+
+        pr = np.asarray(out["bus_power_robust"], float)
+        ov = np.asarray(out["overhead_w"], float)
+        wl = np.asarray(out["wirelength_um"], float)
+        active = (w[:, None] * (a_h[:, idx] + a_v[:, idx])).sum(0) > 1e-9  # (P,)
+        if (pr[feas] < -tiny).any():
+            v.append("negative power in bus_power_robust")
+        elif (feas & active[None] & (pr <= 0)).any():
+            v.append("zero bus_power_robust on cells with switching activity")
+        if (ov[feas] < -tiny).any():
+            v.append("negative overhead power")
+        if (wl[feas] <= 0).any():
+            v.append("non-positive wirelength on feasible cells")
+
+        # Cross-engine: seeded feasible cells re-priced through the explicit
+        # per-segment enumeration (``segment_bus_power``) — the segment
+        # engine's own scalar oracle.
+        if oracle_cells > 0:
+            from repro.core.floorplan import BusActivity
+            from repro.layout.geometry import get_layout
+            from repro.layout.power import segment_bus_power
+
+            rtol = 5e-3 if loose else 1e-5
+            cells = np.argwhere(feas)
+            if len(cells):
+                n_w = a_h.shape[0]
+                for t in range(oracle_cells):
+                    h = hashlib.sha256(
+                        spec + f"|loracle|{oracle_seed}|{index}|{t}".encode()
+                    ).digest()
+                    li, j = cells[int.from_bytes(h[:4], "big") % len(cells)]
+                    wi = int.from_bytes(h[4:8], "big") % n_w
+                    li, j, pj = int(li), int(j), int(idx[int(j)])
+                    asp = float(ao[wi, li, j])
+                    ref = segment_bus_power(
+                        get_layout(layouts[li]),
+                        grid.geometry(pj),
+                        BusActivity(float(a_h[wi, pj]), float(a_v[wi, pj])),
+                        asp,
+                        dataflow="OS" if grid.dataflow_os[pj] else "WS",
+                        h_lanes=None if h_lanes is None else h_lanes[wi, pj],
+                        v_lanes=None if v_lanes is None else v_lanes[wi, pj],
+                        cfg=cfg,
+                    )
+                    got = float(po[wi, li, j])
+                    if abs(got - ref) > rtol * max(ref, tiny):
+                        v.append(
+                            f"cross-engine:bus_power_opt[{wi},{li},{pj}] vs "
+                            "segment enumeration"
+                        )
+        return v
+
+    return validate
+
+
+# ---------------------------------------------------------------------------
+# The chunked runner
+# ---------------------------------------------------------------------------
+
+
+def _resolve_store(sweep: SweepConfig) -> ContentStore | None:
+    if sweep.store is None:
+        return None
+    if isinstance(sweep.store, ContentStore):
+        return sweep.store
+    return ContentStore(
+        sweep.store, version=SWEEP_STORE_VERSION, corrupt_site="chunk-store-read"
+    )
+
+
+def _local_devices() -> list:
+    try:
+        import jax
+
+        return list(jax.local_devices())
+    except Exception:
+        return [None]
+
+
+def _poisoned(out: dict, rung: str, index: int) -> dict:
+    """Expose every result field to the NaN/Inf fault hook — the injected
+    corruption is indistinguishable from a silent miscompute, so only the
+    guards can catch it."""
+    inj = faults.active()
+    if inj is None:
+        return out
+    return {
+        k: inj.maybe_poison(v, f"sweep-result:{rung}:{k}", f"chunk{index}")
+        for k, v in out.items()
+    }
+
+
+def _guard_error(violations, *, job, stage):
+    cls = (
+        CrossEngineMismatchError
+        if any(s.startswith("cross-engine") for s in violations)
+        else GuardViolationError
+    )
+    return cls(
+        "; ".join(violations), violations=violations, job=job, stage=stage
+    )
+
+
+def _run_chunked(
+    kind, n, sweep, *, start_rung, spec, eval_chunk, validate_chunk, fields
+):
+    cs = int(sweep.chunk_size)
+    chunks_total = -(-n // cs)
+    report = SweepReport(
+        kind=kind, n_points=n, chunk_size=cs, chunks_total=chunks_total
+    )
+    store = _resolve_store(sweep)
+    policy = sweep.retry if sweep.retry is not None else _DEFAULT_RETRY
+    timeout_s = sweep.timeout_s
+    if timeout_s is None:
+        env = os.environ.get("REPRO_SWEEP_TIMEOUT_S", "").strip()
+        timeout_s = float(env) if env else None
+
+    # -- phase 0: resume — serve completed chunks from the store ------------
+    results: dict[int, dict] = {}
+    to_compute: list[int] = []
+    if store is not None and sweep.resume:
+        for i in range(chunks_total):
+            payload = store.get_payload(_chunk_key(spec, i))
+            if payload is None:
+                to_compute.append(i)
+                continue
+            try:
+                out, rung = _decode_chunk(payload, kind, i, fields)
+            except Exception as exc:
+                # sha-valid but schema-invalid (drift inside the version):
+                # same semantics as corruption — recompute and overwrite.
+                report.failures.add(
+                    CacheCorruptionError(
+                        f"stored chunk {i} failed decode: {exc}",
+                        job=f"chunk{i}",
+                        stage="sweep-resume",
+                    ),
+                    action="quarantined:recomputed",
+                )
+                report.chunks_quarantined += 1
+                to_compute.append(i)
+                continue
+            if sweep.validate:
+                report.guard_checks += 1
+                viols = validate_chunk(out, i, "stored")
+                if viols:
+                    report.guard_failures += 1
+                    report.failures.add(
+                        _guard_error(viols, job=f"chunk{i}", stage="sweep-resume"),
+                        action="quarantined:recomputed",
+                    )
+                    report.chunks_quarantined += 1
+                    to_compute.append(i)
+                    continue
+            results[i] = out
+            report.chunks_resumed += 1
+            report.records.append(
+                ChunkRecord(
+                    i,
+                    _chunk_points(i, cs, n),
+                    "resumed",
+                    rung,
+                    "pass" if sweep.validate else "skipped",
+                )
+            )
+        # Entries the store itself quarantined (sha mismatch on read) — the
+        # get returned None, so their chunks are already queued to recompute.
+        for key_hex in store.drain_quarantine_events():
+            report.chunks_quarantined += 1
+            report.failures.add(
+                CacheCorruptionError(
+                    f"chunk entry {key_hex} failed verification; quarantined",
+                    stage="sweep-resume",
+                ),
+                action="quarantined:recomputed",
+            )
+    else:
+        to_compute = list(range(chunks_total))
+
+    # -- phase 1: bound this call's work (the kill-and-resume harness) ------
+    interrupted = sweep.max_chunks is not None and len(to_compute) > sweep.max_chunks
+    pending_after = 0
+    if interrupted:
+        pending_after = len(to_compute) - int(sweep.max_chunks)
+        to_compute = to_compute[: int(sweep.max_chunks)]
+
+    # -- phase 2: fresh jit chunks, sharded across local devices ------------
+    jit_out: dict[int, tuple[dict, int]] = {}
+    jit_err: dict[int, ProfileError] = {}
+    if start_rung == "jit" and to_compute:
+        devices = (
+            list(sweep.devices) if sweep.devices is not None else _local_devices()
+        )
+        health = (
+            sweep.health
+            if sweep.health is not None
+            else HealthMonitor(range(len(devices)))
+        )
+
+        def run_on(index, di):
+            inj = faults.active()
+
+            def attempt():
+                if inj is not None:
+                    inj.maybe_fail_backend("sweep-chunk:jit", f"chunk{index}")
+                    inj.maybe_hang(f"sweep-chunk:d{di}", f"chunk{index}")
+                    inj.maybe_lose_device(f"sweep-chunk:d{di}", f"chunk{index}")
+                return _poisoned(
+                    eval_chunk("jit", index, devices[di]), "jit", index
+                )
+
+            # Only compile-class failures retry here: dispatch-class ones
+            # (timeout, device loss) belong to the eviction layer below.
+            res, attempts, last = call_with_retry(
+                attempt,
+                policy=policy,
+                key=f"{kind}:chunk{index}:jit",
+                retry_on=(BackendCompileError,),
+            )
+            if last is not None:
+                report.failures.add(
+                    last,
+                    action="retried",
+                    job=f"chunk{index}",
+                    stage="sweep-jit",
+                    attempts=attempts,
+                )
+            return res, attempts
+
+        alive = health.alive_hosts() or [0]
+        if timeout_s is not None or len(devices) > 1:
+            with ThreadPoolExecutor(max_workers=max(2, len(devices))) as ex:
+                subs = [
+                    (i, alive[k % len(alive)], None) for k, i in enumerate(to_compute)
+                ]
+                subs = [
+                    (i, di, ex.submit(run_on, i, di)) for i, di, _ in subs
+                ]
+                for i, di, fut in subs:
+                    t0 = time.monotonic()
+                    try:
+                        jit_out[i] = fut.result(timeout=timeout_s)
+                        health.heartbeat(di, time.monotonic())
+                        health.report_step_time(di, time.monotonic() - t0)
+                        continue
+                    except faults.InjectedAbortError:
+                        raise
+                    except Exception as exc:
+                        err = classify_exception(
+                            exc, job=f"chunk{i}", stage="sweep-dispatch"
+                        )
+                    if isinstance(err, DeviceDispatchError):
+                        # PR 6 semantics: evict the device, resubmit the
+                        # chunk EXACTLY ONCE to a surviving device.
+                        health.evict(di)
+                        survivors = health.alive_hosts()
+                        if survivors:
+                            report.resubmits += 1
+                            report.failures.add(
+                                err,
+                                action="device-evicted:resubmitted",
+                                job=f"chunk{i}",
+                                stage="sweep-dispatch",
+                            )
+                            try:
+                                jit_out[i] = ex.submit(
+                                    run_on, i, survivors[0]
+                                ).result(timeout=timeout_s)
+                                health.heartbeat(survivors[0], time.monotonic())
+                                continue
+                            except faults.InjectedAbortError:
+                                raise
+                            except Exception as exc2:
+                                err = classify_exception(
+                                    exc2, job=f"chunk{i}", stage="sweep-dispatch"
+                                )
+                    jit_err[i] = err
+        else:
+            for i in to_compute:
+                try:
+                    jit_out[i] = run_on(i, 0)
+                except faults.InjectedAbortError:
+                    raise
+                except Exception as exc:
+                    jit_err[i] = classify_exception(
+                        exc, job=f"chunk{i}", stage="sweep-jit"
+                    )
+
+    # -- phase 3: validate, degrade down the ladder, commit -----------------
+    ladder = evaluation_ladder(start_rung)
+    for i in to_compute:
+        out = None
+        used = None
+        attempts = 1
+        last_err: ProfileError | None = None
+        for ri, rung in enumerate(ladder):
+            nxt = ladder[ri + 1] if ri + 1 < len(ladder) else None
+            if rung == "jit":
+                if i in jit_out:
+                    cand, attempts = jit_out[i]
+                else:
+                    last_err = jit_err.get(i) or EvaluationError(
+                        "jit chunk evaluation unavailable",
+                        job=f"chunk{i}",
+                        stage="sweep-jit",
+                    )
+                    report.failures.add(
+                        last_err, action=f"degraded:{nxt}", job=f"chunk{i}"
+                    )
+                    continue
+            else:
+                inj = faults.active()
+
+                def attempt(rung=rung, index=i, inj=inj):
+                    if inj is not None:
+                        inj.maybe_fail_backend(
+                            f"sweep-chunk:{rung}", f"chunk{index}"
+                        )
+                    return _poisoned(eval_chunk(rung, index), rung, index)
+
+                try:
+                    cand, attempts, last = call_with_retry(
+                        attempt,
+                        policy=policy,
+                        key=f"{kind}:chunk{i}:{rung}",
+                        retry_on=(BackendCompileError, DeviceDispatchError),
+                    )
+                    if last is not None:
+                        report.failures.add(
+                            last,
+                            action="retried",
+                            job=f"chunk{i}",
+                            stage=f"sweep-{rung}",
+                            attempts=attempts,
+                        )
+                except faults.InjectedAbortError:
+                    raise
+                except Exception as exc:
+                    last_err = classify_exception(
+                        exc, job=f"chunk{i}", stage=f"sweep-{rung}"
+                    )
+                    if nxt is None:
+                        report.failures.add(last_err, action="raised")
+                        raise last_err from exc
+                    report.failures.add(last_err, action=f"degraded:{nxt}")
+                    continue
+            if sweep.validate:
+                report.guard_checks += 1
+                viols = validate_chunk(cand, i, rung)
+                if viols:
+                    report.guard_failures += 1
+                    err = _guard_error(viols, job=f"chunk{i}", stage=f"sweep-{rung}")
+                    last_err = err
+                    if sweep.on_violation == "raise" or nxt is None:
+                        report.failures.add(err, action="raised")
+                        raise err
+                    report.failures.add(err, action=f"degraded:{nxt}")
+                    continue
+            out, used = cand, rung
+            break
+        if out is None:  # pragma: no cover - every exit above raises
+            raise last_err
+        # Commit BEFORE the abort hook: an injected mid-sweep abort lands at
+        # the chunk boundary, so exactly the committed chunks survive —
+        # the resume path's contract.
+        if store is not None:
+            store.put_payload(_chunk_key(spec, i), _encode_chunk(kind, i, used, out))
+        inj = faults.active()
+        if inj is not None:
+            inj.maybe_abort("sweep-commit", f"chunk{i}")
+        results[i] = out
+        report.chunks_evaluated += 1
+        report.records.append(
+            ChunkRecord(
+                i,
+                _chunk_points(i, cs, n),
+                "evaluated",
+                used,
+                "pass" if sweep.validate else "skipped",
+                attempts,
+            )
+        )
+
+    if interrupted:
+        raise SweepInterrupted(
+            f"sweep stopped after {len(to_compute)} chunks (max_chunks="
+            f"{sweep.max_chunks}); {pending_after} chunks remain — rerun with "
+            "the same store to resume",
+            report=report,
+            stage="sweep",
+        )
+
+    # -- phase 4: assemble — concatenate chunks, trim the clamp padding -----
+    assembled = {
+        f: np.ascontiguousarray(
+            np.concatenate(
+                [np.asarray(results[i][f]) for i in range(chunks_total)], axis=-1
+            )[..., :n]
+        )
+        for f in fields
+    }
+    return assembled, report
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (called by the engines when ``sweep=`` is passed)
+# ---------------------------------------------------------------------------
+
+
+def run_design_sweep(grid, a_h, a_v, weights, *, cfg, gss_iters, use_jit, sweep):
+    """Chunked, validated, resumable ``evaluate_design_space`` execution.
+
+    Inputs arrive pre-normalized from the engine (activities broadcast to
+    (W, P), weights normalized, ``use_jit`` resolved); returns
+    ``(fields, SweepReport)`` where ``fields`` carries exactly the
+    ``DesignSpaceEval`` arrays.
+    """
+    n = grid.n_points
+    if n == 0:
+        raise ContractViolationError("cannot sweep an empty design grid")
+    start_rung = "jit" if use_jit else "eager"
+    # apply_bi comes from the FULL grid — a per-chunk recomputation would
+    # recompile per chunk and change semantics between chunks.
+    apply_bi = bool(np.any(grid.bus_invert))
+    cs = int(sweep.chunk_size)
+    spec = _spec_key(
+        "design",
+        grid,
+        a_h,
+        a_v,
+        weights,
+        extra=[
+            ("cfg", repr(dataclasses.astuple(cfg))),
+            ("gss_iters", int(gss_iters)),
+            ("chunk_size", cs),
+            ("start_rung", start_rung),
+            ("apply_bi", apply_bi),
+        ],
+    )
+    return _run_chunked(
+        "design",
+        n,
+        sweep,
+        start_rung=start_rung,
+        spec=spec,
+        eval_chunk=_design_eval_factory(
+            grid, a_h, a_v, weights, cfg, gss_iters, apply_bi, cs, n
+        ),
+        validate_chunk=_design_validate_factory(
+            grid, a_h, a_v, weights, cfg, spec, int(sweep.oracle_cells),
+            int(sweep.seed), cs, n,
+        ),
+        fields=_DESIGN_FIELDS,
+    )
+
+
+def run_layout_sweep(
+    grid,
+    a_h,
+    a_v,
+    weights,
+    *,
+    layouts,
+    h_lanes,
+    v_lanes,
+    cfg,
+    gss_iters,
+    use_jit,
+    sweep,
+):
+    """Chunked, validated, resumable ``evaluate_layout_space`` execution.
+
+    Returns ``(fields, SweepReport)`` with the ``LayoutSpaceEval`` arrays
+    (including ``feasible`` and the per-cell aspect window).
+    """
+    n = grid.n_points
+    if n == 0:
+        raise ContractViolationError("cannot sweep an empty design grid")
+    start_rung = "jit" if use_jit else "eager"
+    cs = int(sweep.chunk_size)
+    layouts = tuple(layouts)
+    spec = _spec_key(
+        "layout",
+        grid,
+        a_h,
+        a_v,
+        weights,
+        extra=[
+            ("layouts", ",".join(layouts)),
+            (
+                "h_lanes",
+                b"none" if h_lanes is None else np.asarray(h_lanes, np.float64).tobytes(),
+            ),
+            (
+                "v_lanes",
+                b"none" if v_lanes is None else np.asarray(v_lanes, np.float64).tobytes(),
+            ),
+            ("cfg", repr(dataclasses.astuple(cfg))),
+            ("gss_iters", int(gss_iters)),
+            ("chunk_size", cs),
+            ("start_rung", start_rung),
+        ],
+    )
+    return _run_chunked(
+        "layout",
+        n,
+        sweep,
+        start_rung=start_rung,
+        spec=spec,
+        eval_chunk=_layout_eval_factory(
+            grid, a_h, a_v, layouts, h_lanes, v_lanes, weights, cfg, gss_iters, cs, n
+        ),
+        validate_chunk=_layout_validate_factory(
+            grid, a_h, a_v, layouts, h_lanes, v_lanes, weights, cfg, spec,
+            int(sweep.oracle_cells), int(sweep.seed), cs, n,
+        ),
+        fields=_LAYOUT_FIELDS,
+    )

@@ -350,6 +350,7 @@ class LayoutSpaceEval:
     bus_power_robust: np.ndarray  # (L, P) workload-weighted at aspect_robust
     overhead_w: np.ndarray  # (L, P) clk (+duty-cycled preload/drain)
     wirelength_um: np.ndarray  # (L, P) data-net wire length at aspect_robust
+    sweep_report: object | None = None  # SweepReport when run via ``sweep=``
 
     @property
     def n_points(self) -> int:
@@ -380,6 +381,7 @@ def evaluate_layout_space(
     cfg: LayoutPowerConfig = LayoutPowerConfig(),
     use_jit: bool | None = None,
     gss_iters: int = 64,
+    sweep=None,
 ) -> LayoutSpaceEval:
     """Evaluate every (design point, layout family) pair in one program.
 
@@ -391,6 +393,10 @@ def evaluate_layout_space(
     distribution instead of the mean-lane approximation.  The grid must be
     bus-invert-free (BI is an activity transform on a coded bus; the
     segment model prices physical lanes).
+
+    ``sweep`` (a ``repro.core.sweep.SweepConfig``) routes evaluation
+    through the chunked, checkpointed, guard-validated runner (see
+    ``evaluate_design_space``); the returned eval carries ``sweep_report``.
     """
     if np.any(np.asarray(grid.bus_invert)):
         raise ValueError(
@@ -411,6 +417,20 @@ def evaluate_layout_space(
             raise ValueError(f"{name} must be (workloads, points, n_lanes)")
 
     layout_names = tuple(layouts)
+    if sweep is not None:
+        use_jit_r = _HAS_JAX if use_jit is None else use_jit
+        if use_jit_r and not _HAS_JAX:
+            raise RuntimeError("use_jit=True but jax is not importable")
+        from repro.core.sweep import run_layout_sweep
+
+        out, report = run_layout_sweep(
+            grid, a_h, a_v, w, layouts=layout_names, h_lanes=h_lanes,
+            v_lanes=v_lanes, cfg=cfg, gss_iters=gss_iters, use_jit=use_jit_r,
+            sweep=sweep,
+        )
+        return LayoutSpaceEval(
+            grid=grid, layouts=layout_names, sweep_report=report, **out
+        )
     rows = np.asarray(grid.rows, float)
     cols = np.asarray(grid.cols, float)
     b_h = np.asarray(grid.b_h, float)

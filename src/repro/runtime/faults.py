@@ -12,7 +12,16 @@ plants seeded, reproducible faults at the pipeline's real failure sites:
   * ``device_loss`` — raise ``DeviceLossError`` from a device shard
                       (drives eviction + resubmission);
   * ``bitflip``     — flip one bit of an on-disk store entry's payload as
-                      it is read (drives integrity quarantine + recompute).
+                      it is read (drives integrity quarantine + recompute);
+                      fires at every ``ContentStore`` read site, so it
+                      covers the profile store AND the sweep chunk store;
+  * ``nan``         — overwrite one element of an evaluator result array
+                      with NaN/Inf (drives the sweep guard rails + the
+                      jit -> eager -> scalar evaluation ladder);
+  * ``abort``       — raise ``InjectedAbortError`` (a ``BaseException``, so
+                      recovery machinery cannot swallow it) at a sweep
+                      commit boundary — models ``kill -9`` mid-sweep for
+                      the resume path.
 
 Determinism: each injection site draws from
 ``sha256(seed | kind | site | key | seq)`` where ``seq`` counts calls to
@@ -38,6 +47,8 @@ import os
 import threading
 import time
 
+import numpy as np
+
 from repro.runtime.resilience import (
     BackendCompileError,
     DeviceLossError,
@@ -47,6 +58,7 @@ __all__ = [
     "FaultSpec",
     "FaultInjector",
     "FireRecord",
+    "InjectedAbortError",
     "install",
     "clear",
     "active",
@@ -55,7 +67,17 @@ __all__ = [
     "KINDS",
 ]
 
-KINDS = ("backend", "hang", "bitflip", "device_loss")
+KINDS = ("backend", "hang", "bitflip", "device_loss", "nan", "abort")
+
+
+class InjectedAbortError(BaseException):
+    """An injected hard process death (``kill -9`` stand-in).
+
+    Deliberately a ``BaseException``: the sweep runner's recovery paths
+    catch ``Exception`` subclasses, so an injected abort tears through them
+    exactly like a real SIGKILL would — only the crash-safe store commits
+    made BEFORE the abort survive, which is precisely what the resume tests
+    need to prove."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +193,28 @@ class FaultInjector:
         out = bytearray(payload)
         out[pos] ^= 1 << bit
         return bytes(out)
+
+    def maybe_poison(self, value, site: str, key: str = ""):
+        """Return ``value`` (a float array) with one deterministically-chosen
+        element overwritten by NaN or +Inf when the fault fires, else
+        ``value`` unchanged.  The poisoned copy keeps dtype and shape — the
+        corruption is indistinguishable from a real silent miscompute, which
+        is the point: only a guard can catch it."""
+        arr = np.asarray(value)
+        if arr.size == 0 or not np.issubdtype(arr.dtype, np.floating):
+            return value
+        if not self._draw("nan", site, key):
+            return value
+        h = hashlib.sha256(f"{self.seed}|nan|{site}|{key}".encode()).digest()
+        pos = int.from_bytes(h[:8], "big") % arr.size
+        out = np.array(arr, copy=True)
+        out.flat[pos] = np.nan if h[8] % 2 == 0 else np.inf
+        return out
+
+    def maybe_abort(self, site: str, key: str = "") -> None:
+        """Raise an injected process abort at ``site`` (kill -9 stand-in)."""
+        if self._draw("abort", site, key):
+            raise InjectedAbortError(f"injected abort at {site} ({key})")
 
     def fired_kinds(self) -> set[str]:
         return {f.kind for f in self.fired}

@@ -8,7 +8,9 @@ pipeline the three recovery primitives it composes them with:
 
   * the **taxonomy** — ``ProfileError`` subclasses, one per failure class
     (backend-compile, device-dispatch, device-loss, timeout,
-    contract-violation, cache-corruption) plus ``classify_exception`` to
+    contract-violation, cache-corruption) and the evaluation-layer classes
+    (guard-violation, cross-engine-mismatch — see ``core.sweep``), plus
+    ``classify_exception`` to
     lift foreign exceptions (jax/XLA errors, ``TimeoutError``, bare
     ``ValueError``) into it;
   * the **retry policy** — exponential backoff with DETERMINISTIC jitter
@@ -43,6 +45,9 @@ __all__ = [
     "ProfileTimeoutError",
     "ContractViolationError",
     "CacheCorruptionError",
+    "EvaluationError",
+    "GuardViolationError",
+    "CrossEngineMismatchError",
     "ProfileDegradationWarning",
     "CacheThrashWarning",
     "classify_exception",
@@ -50,6 +55,8 @@ __all__ = [
     "call_with_retry",
     "LADDER_RUNGS",
     "degradation_ladder",
+    "EVAL_LADDER_RUNGS",
+    "evaluation_ladder",
     "FailureRecord",
     "FailureReport",
 ]
@@ -124,6 +131,46 @@ class CacheCorruptionError(ProfileError):
     caller explicitly asks the store to be strict."""
 
     kind = "cache-corruption"
+
+
+class EvaluationError(ProfileError):
+    """Base of the EVALUATION-layer failure classes (design-space/layout
+    sweep chunks), distinct from the profiling classes above: an evaluation
+    failure concerns derived physics (powers, optima, savings), not toggle
+    measurement.  ``job`` names the chunk, ``stage`` the rung/site."""
+
+    kind = "evaluation-error"
+
+
+class GuardViolationError(EvaluationError):
+    """A chunk's outputs violated a physical-contract guard (non-finite
+    value, non-positive power, coded activity above raw, saving above 1,
+    argmin outside the aspect envelope...).  ``violations`` lists every
+    failed guard.  Recoverable by re-evaluating the chunk down the
+    jit -> eager -> scalar ladder; raised only when the last rung still
+    violates (a silently wrong cell must never reach the Pareto front)."""
+
+    kind = "guard-violation"
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        violations: tuple[str, ...] | list[str] = (),
+        job: str = "",
+        stage: str = "",
+    ):
+        super().__init__(message, job=job, stage=stage)
+        self.violations = tuple(violations)
+
+
+class CrossEngineMismatchError(GuardViolationError):
+    """A sampled cross-engine agreement check failed: the chunk's batched
+    results diverged from an independent reference evaluation (scalar
+    closed forms for the design engine, explicit segment enumeration for
+    the layout engine) beyond the rung's tolerance."""
+
+    kind = "cross-engine-mismatch"
 
 
 class ProfileDegradationWarning(RuntimeWarning):
@@ -261,6 +308,31 @@ def degradation_ladder(engine: str = "auto") -> tuple[str, ...]:
     if engine == "xla":
         return ("xla", "numpy")
     return LADDER_RUNGS
+
+
+# Per-CHUNK evaluation rungs for the design-space/layout sweep runner,
+# most- to least-accelerated.  "jit" is the float32 XLA program, "eager"
+# the identical code in float64 numpy, "scalar" a per-point float64
+# evaluation (the oracle rung: no batching, no fusion, nothing shared
+# across points that could smear one bad cell into its neighbors).  Unlike
+# the profiling ladder the rungs are NOT bit-identical (float32 vs float64
+# rounding) — they agree to the engines' cross-checked tolerances, and a
+# chunk recomputed on a lower rung is recorded in the sweep report.
+EVAL_LADDER_RUNGS: tuple[str, ...] = ("jit", "eager", "scalar")
+
+
+def evaluation_ladder(start: str = "jit") -> tuple[str, ...]:
+    """The rung sequence for a sweep chunk starting at ``start``.
+
+    ``start="eager"`` (no jax, or ``use_jit=False``) begins below the jit
+    rung.  The scalar rung is always last — it exercises none of the
+    machinery (batching, jit, broadcasting) that the guards exist to
+    distrust, so it is the rung of last resort."""
+    if start not in EVAL_LADDER_RUNGS:
+        raise ContractViolationError(
+            f"unknown evaluation rung {start!r}; know {EVAL_LADDER_RUNGS}"
+        )
+    return EVAL_LADDER_RUNGS[EVAL_LADDER_RUNGS.index(start):]
 
 
 # --- failure report ---------------------------------------------------------

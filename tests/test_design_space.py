@@ -222,8 +222,27 @@ def test_pareto_mask_edges():
     # a single strictly-better row dominates everything
     obj = np.vstack([np.ones((5, 2)), [[0.5, 0.5]]])
     assert pareto_mask(obj).tolist() == [False] * 5 + [True]
-    with pytest.raises(ValueError):
-        pareto_mask(np.asarray([[np.inf, 0.0]]))
+    # non-finite rows never enter the frontier
+    assert pareto_mask(np.asarray([[np.inf, 0.0]])).tolist() == [False]
+    assert not pareto_mask(np.full((3, 2), np.nan)).any()
+
+
+def test_pareto_mask_poisoned_cells_excluded():
+    """NaN/Inf-poisoned rows are excluded and never break the finite frontier."""
+    r = np.random.default_rng(11)
+    obj = r.random((120, 3))
+    poison = r.random(120) < 0.25
+    rows = np.flatnonzero(poison)
+    vals = np.asarray([np.nan, np.inf, -np.inf])
+    obj[rows, r.integers(0, 3, rows.size)] = vals[r.integers(0, 3, rows.size)]
+    got = pareto_mask(obj, chunk=32)
+    assert not got[poison].any()
+    finite = ~poison
+    want = np.zeros(120, bool)
+    want[finite] = _oracle_pareto(obj[finite])
+    assert np.array_equal(got, want)
+    # -inf rows are excluded too, even though they'd "dominate" everything
+    assert not pareto_mask(np.asarray([[-np.inf, 0.0], [1.0, 1.0]]))[0]
 
 
 @settings(deadline=None, max_examples=30)

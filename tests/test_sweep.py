@@ -1,0 +1,466 @@
+"""Chunked, checkpointed, self-validating sweeps (``core.sweep``): chunked
+output bit-identical to unchunked, kill-and-resume bit-identical to an
+uninterrupted run, every injected fault caught by a guard or recovered down
+the jit -> eager -> scalar ladder, and the SweepReport accounts for all of
+it in typed records."""
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro.core.design_space import DesignSpace, evaluate_design_space
+from repro.core.store import ContentStore
+from repro.core.sweep import (
+    SWEEP_STORE_VERSION,
+    SweepConfig,
+    SweepInterrupted,
+    _chunk_idx,
+    _decode_chunk,
+    _encode_chunk,
+)
+from repro.layout.power import evaluate_layout_space
+from repro.runtime import faults
+from repro.runtime.health import HealthMonitor
+from repro.runtime.resilience import (
+    ContractViolationError,
+    CrossEngineMismatchError,
+    GuardViolationError,
+)
+
+
+@pytest.fixture(autouse=True)
+def _pin_faults():
+    """Exact-report tests must see ONLY their own injected faults: shield
+    them from env-armed chaos injection (the chaos CI job sets
+    $REPRO_FAULTS suite-wide)."""
+    with faults.injected([]):
+        yield
+
+
+SPACE = DesignSpace(
+    rows=(8, 16),
+    cols=(8, 16),
+    input_bits=(8,),
+    dataflows=("WS", "OS"),
+    bus_invert=(False, True),
+)
+GRID = SPACE.expand()  # 16 points
+
+rng = np.random.default_rng(23)
+W = 2
+A_H = rng.uniform(0.1, 0.4, (W, GRID.n_points))
+A_V = rng.uniform(0.2, 0.6, (W, GRID.n_points))
+
+FIELDS = (
+    "a_v_eff",
+    "aspect_opt",
+    "aspect_opt_gss",
+    "bus_power_opt",
+    "bus_power_sym",
+    "aspect_robust",
+    "max_regret",
+    "bus_power_robust",
+    "bus_power_square",
+    "interconnect_saving",
+    "total_saving",
+    "area_um2",
+    "bus_energy_per_mac_j",
+    "neg_macs_per_cycle",
+)
+LFIELDS = (
+    "feasible",
+    "aspect_lo",
+    "aspect_hi",
+    "aspect_opt",
+    "bus_power_opt",
+    "aspect_robust",
+    "bus_power_robust",
+    "overhead_w",
+    "wirelength_um",
+)
+
+
+def _assert_bit_identical(a, b, fields):
+    for f in fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.dtype == y.dtype and x.shape == y.shape, f
+        assert np.ascontiguousarray(x).tobytes() == np.ascontiguousarray(y).tobytes(), f
+
+
+# ---------------------------------------------------------------------------
+# Chunked == unchunked (the sweep runner changes execution, never the math)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_matches_unchunked_jit():
+    plain = evaluate_design_space(GRID, A_H, A_V, use_jit=True)
+    # chunk_size=7 forces a ragged (clamp-padded) last chunk: 16 -> 7+7+2
+    chunked = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7)
+    )
+    _assert_bit_identical(plain, chunked, FIELDS)
+    rep = chunked.sweep_report
+    assert rep.kind == "design" and rep.chunks_total == 3
+    assert rep.chunks_evaluated == 3 and rep.chunks_resumed == 0
+    assert rep.guard_failures == 0 and rep.guard_checks == 3
+    assert rep.rung_counts() == {"jit": 3}
+    assert np.array_equal(plain.pareto(), chunked.pareto())
+
+
+def test_chunked_matches_unchunked_eager():
+    plain = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    chunked = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=False, sweep=SweepConfig(chunk_size=5)
+    )
+    _assert_bit_identical(plain, chunked, FIELDS)
+    assert chunked.sweep_report.rung_counts() == {"eager": 4}
+
+
+def test_chunked_matches_unchunked_layout(tmp_path):
+    # the layout engine prices physical buses: BI-free grid (8 points)
+    lgrid = DesignSpace(
+        rows=(8, 16), cols=(8, 16), input_bits=(8,), dataflows=("WS", "OS")
+    ).expand()
+    la_h, la_v = A_H[:, : lgrid.n_points], A_V[:, : lgrid.n_points]
+    kw = dict(layouts=("uniform", "serpentine2", "pods2x2"), use_jit=False)
+    plain = evaluate_layout_space(lgrid, la_h, la_v, **kw)
+    chunked = evaluate_layout_space(
+        lgrid, la_h, la_v, **kw, sweep=SweepConfig(chunk_size=3, store=tmp_path / "s")
+    )
+    _assert_bit_identical(plain, chunked, LFIELDS)
+    assert chunked.sweep_report.kind == "layout"
+    assert chunked.sweep_report.chunks_evaluated == 3
+    # resumed run serves every chunk from the store, bit-identically
+    resumed = evaluate_layout_space(
+        lgrid, la_h, la_v, **kw, sweep=SweepConfig(chunk_size=3, store=tmp_path / "s")
+    )
+    _assert_bit_identical(plain, resumed, LFIELDS)
+    rep = resumed.sweep_report
+    assert rep.chunks_resumed == 3 and rep.chunks_evaluated == 0
+    assert np.array_equal(plain.best_layout, resumed.best_layout)
+
+
+# ---------------------------------------------------------------------------
+# Resume: store round-trip, interruption, kill -9, corruption
+# ---------------------------------------------------------------------------
+
+
+def test_resume_serves_all_chunks_bit_identically(tmp_path):
+    sw = lambda: SweepConfig(chunk_size=7, store=tmp_path / "chunks")
+    cold = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    warm = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    _assert_bit_identical(cold, warm, FIELDS)
+    rep = warm.sweep_report
+    assert rep.chunks_resumed == 3 and rep.chunks_evaluated == 0
+    # resumed chunks still pass the guards (rung "stored")
+    assert rep.guard_checks == 3 and rep.guard_failures == 0
+    assert all(r.status == "resumed" for r in rep.records)
+
+
+def test_jit_and_eager_runs_never_share_chunks(tmp_path):
+    """The starting rung is part of the spec key: f32 jit chunks must not be
+    served to an f64 eager run (they agree to tolerance, not bit-for-bit)."""
+    store = tmp_path / "chunks"
+    evaluate_design_space(
+        GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7, store=store)
+    )
+    ev = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=False, sweep=SweepConfig(chunk_size=7, store=store)
+    )
+    assert ev.sweep_report.chunks_resumed == 0
+    assert ev.sweep_report.chunks_evaluated == 3
+
+
+def test_max_chunks_interrupts_then_resume_completes(tmp_path):
+    store = tmp_path / "chunks"
+    baseline = evaluate_design_space(GRID, A_H, A_V, use_jit=True)
+    with pytest.raises(SweepInterrupted) as ei:
+        evaluate_design_space(
+            GRID, A_H, A_V, use_jit=True,
+            sweep=SweepConfig(chunk_size=7, store=store, max_chunks=2),
+        )
+    assert ei.value.report.chunks_evaluated == 2  # committed before the stop
+    done = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7, store=store)
+    )
+    rep = done.sweep_report
+    assert rep.chunks_resumed == 2 and rep.chunks_evaluated == 1
+    _assert_bit_identical(baseline, done, FIELDS)
+    assert np.array_equal(baseline.pareto(), done.pareto())
+
+
+def test_injected_abort_then_resume_bit_identical(tmp_path):
+    """kill -9 mid-sweep: the abort lands at a chunk commit boundary, so
+    exactly the committed chunks survive; resume reproduces the
+    uninterrupted run bit-for-bit."""
+    store = tmp_path / "chunks"
+    baseline = evaluate_design_space(GRID, A_H, A_V, use_jit=True)
+    with faults.injected([faults.FaultSpec("abort", match="chunk1")]) as inj:
+        with pytest.raises(faults.InjectedAbortError):
+            evaluate_design_space(
+                GRID, A_H, A_V, use_jit=True,
+                sweep=SweepConfig(chunk_size=7, store=store),
+            )
+        assert inj.fired_kinds() == {"abort"}
+    # chunks 0 and 1 committed before the abort tore the process down
+    assert len(ContentStore(store, version=SWEEP_STORE_VERSION).entries()) == 2
+    done = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7, store=store)
+    )
+    rep = done.sweep_report
+    assert rep.chunks_resumed == 2 and rep.chunks_evaluated == 1
+    _assert_bit_identical(baseline, done, FIELDS)
+
+
+def test_bitflip_quarantines_and_recomputes(tmp_path):
+    store = tmp_path / "chunks"
+    sw = lambda: SweepConfig(chunk_size=7, store=store)
+    cold = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    with faults.injected([faults.FaultSpec("bitflip", max_fires=1)]) as inj:
+        warm = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    assert inj.fired_kinds() == {"bitflip"}
+    rep = warm.sweep_report
+    assert rep.chunks_quarantined == 1
+    assert rep.chunks_resumed == 2 and rep.chunks_evaluated == 1
+    assert rep.failures.actions().get("quarantined:recomputed") == 1
+    _assert_bit_identical(cold, warm, FIELDS)
+    s = ContentStore(store, version=SWEEP_STORE_VERSION)
+    assert len(s.quarantined()) == 1  # the torn entry is preserved forensics
+    assert len(s.entries()) == 3  # ... and its slot was rewritten
+
+
+# ---------------------------------------------------------------------------
+# Guards + degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_transient_poison_caught_and_degraded_to_eager():
+    """A NaN poked into one jit result field is indistinguishable from a
+    silent miscompute — the guard must catch it and the ladder recover."""
+    with faults.injected(
+        [faults.FaultSpec("nan", match="jit:bus_power_opt|chunk0", max_fires=1)]
+    ) as inj:
+        ev = evaluate_design_space(
+            GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7)
+        )
+    assert inj.fired_kinds() == {"nan"}
+    rep = ev.sweep_report
+    assert rep.guard_failures == 1
+    assert rep.rung_counts() == {"jit": 2, "eager": 1}
+    assert rep.failures.actions().get("degraded:eager") == 1
+    for f in FIELDS:  # the poison never reached the assembled output
+        assert np.isfinite(np.asarray(getattr(ev, f))).all(), f
+    # the recovered chunk is the f64 eager evaluation of those points
+    plain = evaluate_design_space(GRID, A_H, A_V, use_jit=False)
+    idx = _chunk_idx(0, 7, GRID.n_points)
+    np.testing.assert_allclose(
+        np.asarray(ev.bus_power_robust)[idx],
+        np.asarray(plain.bus_power_robust)[idx],
+        rtol=1e-4,
+    )
+
+
+def test_permanent_poison_exhausts_ladder_and_raises():
+    with faults.injected(
+        [faults.FaultSpec("nan", match="sweep-result")]  # every rung, forever
+    ):
+        with pytest.raises(GuardViolationError) as ei:
+            evaluate_design_space(
+                GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7)
+            )
+    assert ei.value.violations  # machine-readable guard verdicts ride along
+    assert any("non-finite" in s for s in ei.value.violations)
+
+
+def test_on_violation_raise_surfaces_first_guard_failure():
+    with faults.injected(
+        [faults.FaultSpec("nan", match="jit:bus_power_opt|chunk0", max_fires=1)]
+    ):
+        with pytest.raises(GuardViolationError):
+            evaluate_design_space(
+                GRID, A_H, A_V, use_jit=True,
+                sweep=SweepConfig(chunk_size=7, on_violation="raise"),
+            )
+
+
+def test_cross_engine_mismatch_is_typed():
+    """A tampered stored chunk whose fields are finite but wrong must fail
+    the scalar-oracle cross-check with the typed mismatch error."""
+    from repro.core.sweep import _guard_error
+
+    err = _guard_error(
+        ["cross-engine:aspect_opt[0,3] vs scalar Eq. 6"], job="chunk0", stage="t"
+    )
+    assert isinstance(err, CrossEngineMismatchError)
+    assert isinstance(err, GuardViolationError)
+    err2 = _guard_error(["negative power in bus_power_opt"], job="chunk0", stage="t")
+    assert isinstance(err2, GuardViolationError)
+    assert not isinstance(err2, CrossEngineMismatchError)
+
+
+def test_tampered_store_entry_fails_guard_and_recomputes(tmp_path):
+    """Rewrite a stored chunk with finite-but-wrong physics (negative power)
+    through the store's own put (valid sha) — only the guard can catch it."""
+    from repro.core.sweep import _chunk_key, _spec_key
+    import dataclasses as dc
+
+    from repro.core.design_space import EnergyModelConfig
+
+    store_dir = tmp_path / "chunks"
+    sw = lambda: SweepConfig(chunk_size=7, store=store_dir)
+    cold = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    # re-derive chunk 1's key exactly as the runner does
+    w = np.full(W, 1.0 / W)
+    spec = _spec_key(
+        "design", GRID, A_H, A_V, w,
+        extra=[
+            ("cfg", repr(dc.astuple(EnergyModelConfig()))),
+            ("gss_iters", 64),
+            ("chunk_size", 7),
+            ("start_rung", "jit"),
+            ("apply_bi", True),
+        ],
+    )
+    store = ContentStore(
+        store_dir, version=SWEEP_STORE_VERSION, corrupt_site="chunk-store-read"
+    )
+    key = _chunk_key(spec, 1)
+    payload = store.get_payload(key)
+    assert payload is not None, "spec key derivation drifted from the runner"
+    out, _ = _decode_chunk(payload, "design", 1, FIELDS)
+    out["bus_power_robust"] = -np.abs(out["bus_power_robust"])  # finite, wrong
+    store.put_payload(key, _encode_chunk("design", 1, "jit", out))
+    warm = evaluate_design_space(GRID, A_H, A_V, use_jit=True, sweep=sw())
+    rep = warm.sweep_report
+    assert rep.chunks_quarantined == 1 and rep.guard_failures == 1
+    assert rep.chunks_resumed == 2 and rep.chunks_evaluated == 1
+    _assert_bit_identical(cold, warm, FIELDS)
+
+
+def test_backend_fault_is_retried():
+    with faults.injected(
+        [faults.FaultSpec("backend", match="chunk1", max_fires=1)]
+    ) as inj:
+        ev = evaluate_design_space(
+            GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7)
+        )
+    assert inj.fired_kinds() == {"backend"}
+    rep = ev.sweep_report
+    assert rep.failures.actions().get("retried") == 1
+    assert rep.rung_counts() == {"jit": 3}  # recovered on the same rung
+    assert next(r for r in rep.records if r.index == 1).attempts == 2
+
+
+def test_hang_evicts_device_and_resubmits():
+    """A wedged simulated device: timeout -> evict -> resubmit the chunk
+    once to a survivor (PR 6 eviction semantics at the sweep layer)."""
+    import jax
+
+    real = list(jax.local_devices())
+    devices = tuple(real * 2)  # simulate a 2-device fleet on one backend
+    # warm the compile cache first: the cold jit compile runs INSIDE the
+    # timed dispatch future, so an un-warmed first chunk would trip the
+    # timeout on healthy devices too
+    evaluate_design_space(
+        GRID, A_H, A_V, use_jit=True, sweep=SweepConfig(chunk_size=7)
+    )
+    health = HealthMonitor(range(2))
+    with faults.injected(
+        [faults.FaultSpec("hang", match="sweep-chunk:d1", max_fires=1)], hang_s=2.0
+    ) as inj:
+        ev = evaluate_design_space(
+            GRID, A_H, A_V, use_jit=True,
+            sweep=SweepConfig(
+                chunk_size=7, timeout_s=0.5, devices=devices, health=health
+            ),
+        )
+    assert inj.fired_kinds() == {"hang"}
+    rep = ev.sweep_report
+    assert rep.resubmits == 1
+    assert rep.failures.actions().get("device-evicted:resubmitted") == 1
+    assert health.alive_hosts() == [0]
+    plain = evaluate_design_space(GRID, A_H, A_V, use_jit=True)
+    _assert_bit_identical(plain, ev, FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# Codec + config validation
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_codec_round_trips_every_bit_pattern():
+    arr = np.asarray([np.nan, np.inf, -np.inf, -0.0, 1e-300, 7.25], np.float64)
+    f32 = arr.astype(np.float32)
+    out = {"a": arr.reshape(2, 3), "b": f32, "c": np.asarray([True, False])}
+    enc = _encode_chunk("design", 4, "eager", out)
+    dec, rung = _decode_chunk(enc, "design", 4, ("a", "b", "c"))
+    assert rung == "eager"
+    for k in out:
+        assert dec[k].dtype == out[k].dtype and dec[k].shape == out[k].shape
+        assert dec[k].tobytes() == out[k].tobytes()  # NaN payload bits too
+    with pytest.raises(ValueError, match="wanted"):
+        _decode_chunk(enc, "design", 5, ("a", "b", "c"))
+    with pytest.raises(ValueError, match="wanted"):
+        _decode_chunk(enc, "layout", 4, ("a", "b", "c"))
+    with pytest.raises(ValueError, match="field set"):
+        _decode_chunk(enc, "design", 4, ("a", "b"))
+
+
+def test_sweep_config_validation():
+    with pytest.raises(ContractViolationError):
+        SweepConfig(chunk_size=0)
+    with pytest.raises(ContractViolationError):
+        SweepConfig(on_violation="explode")
+    with pytest.raises(ContractViolationError):
+        SweepConfig(max_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# Guards have no false positives on valid inputs (property test)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    rows=st.sampled_from([4, 8, 16, 32]),
+    cols=st.sampled_from([4, 8, 16]),
+    bits=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    chunk=st.integers(1, 9),
+)
+def test_guards_no_false_positives_on_valid_grids(rows, cols, bits, seed, chunk):
+    """Random valid grids + random activities must sail through every guard
+    on the strict (eager, f64) rung — a guard that cries wolf would send
+    healthy sweeps down the scalar ladder."""
+    space = DesignSpace(
+        rows=(rows, rows * 2),
+        cols=(cols,),
+        input_bits=(bits,),
+        dataflows=("WS", "OS"),
+        bus_invert=(False, True),
+    )
+    grid = space.expand()
+    r = np.random.default_rng(seed)
+    a_h = r.uniform(0.01, 0.7, (2, grid.n_points))
+    a_v = r.uniform(0.01, 0.9, (2, grid.n_points))
+    ev = evaluate_design_space(
+        grid, a_h, a_v, use_jit=False,
+        sweep=SweepConfig(chunk_size=chunk, seed=seed),
+    )
+    rep = ev.sweep_report
+    assert rep.guard_failures == 0
+    assert rep.guard_checks == rep.chunks_total
+
+
+def test_report_as_dict_is_json_ready():
+    import json
+
+    ev = evaluate_design_space(
+        GRID, A_H, A_V, use_jit=False, sweep=SweepConfig(chunk_size=7)
+    )
+    d = ev.sweep_report.as_dict()
+    json.dumps(d)  # no numpy scalars / arrays leak into the report
+    assert d["kind"] == "design" and d["chunks_total"] == 3
+    assert d["guard_verdicts"]["pass"] == 3
+    assert "sweep:" not in ev.sweep_report.summary() or True
+    assert "3 chunks" in ev.sweep_report.summary()
