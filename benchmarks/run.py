@@ -11,10 +11,12 @@ JSON document; CI uploads it as a workflow artifact so regressions can be
 diffed across runs.  Each JSON row records a ``dataflow`` field ("WS",
 "OS", "WS+OS", or "" when the row is dataflow-agnostic), a ``layout``
 field (a layout-family name, "+"-joined names, or "" when the row is
-layout-agnostic), and a ``sweep`` field ({} unless the row ran through the
-chunked sweep runner, in which case it carries the machine-readable
-``SweepReport`` dicts: chunks evaluated/resumed/quarantined, guard
-verdicts, rung counts, failure records).
+layout-agnostic), a ``cells_per_s`` field (warm coefficient-evaluator
+throughput; 0.0 for rows that don't measure it), and a ``sweep`` field
+({} unless the row ran through the chunked sweep runner, in which case it
+carries the machine-readable ``SweepReport`` dicts: chunks
+evaluated/resumed/quarantined, guard verdicts, rung counts, failure
+records).
 """
 
 from __future__ import annotations
@@ -82,6 +84,10 @@ def main(argv: list[str] | None = None) -> None:
                         "derived": str(row["derived"]),
                         "dataflow": str(row.get("dataflow", "")),
                         "layout": str(row.get("layout", "")),
+                        # warm throughput of the coefficient-protocol
+                        # evaluator (0.0 for rows that don't measure it) —
+                        # the CI perf-floor job tracks this trajectory
+                        "cells_per_s": float(row.get("cells_per_s", 0.0)),
                         # chunked-sweep accounting (chunks evaluated /
                         # resumed / quarantined, guard verdicts) — the CI
                         # sweep-resume and chaos jobs assert against these
@@ -100,9 +106,13 @@ def main(argv: list[str] | None = None) -> None:
     # run's JSON proves it skipped re-profiling (store hits > 0, zero
     # integrity failures) — the CI cold->warm job asserts exactly this.
     from repro.core.switching import profile_cache_info, profile_store_info
+    from repro.layout import coeff_cache_info
 
     report["profile_cache"] = profile_cache_info()
     report["profile_store"] = profile_store_info()
+    # Coefficient-lowering memo accounting: hits prove repeated sweeps over
+    # the same (grid, layouts) reuse the lowered arrays instead of re-lowering
+    report["coeff_cache"] = coeff_cache_info()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)

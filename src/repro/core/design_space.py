@@ -112,9 +112,12 @@ class DesignSpace:
       bus_invert       whether the vertical bus is BI-coded (B_v += 1 invert
                        line, a_v -> coded activity at evaluation time).
       pe_area_um2      per-PE area.
-      layouts          physical layout families (names from
-                       ``repro.layout.LAYOUTS``) to pair every geometry
-                       point with.  The layout axis is evaluated by the
+      layouts          physical layout families to pair every geometry point
+                       with: registered names (``repro.layout.LAYOUTS``) or
+                       parametric spellings — ``"pods{k}x{k}"`` promotes pod
+                       count k to a free integer axis (``pod_layouts``),
+                       ``"serpentine{f}"`` the fold count.  The layout axis
+                       is evaluated by the
                        segment-level engine (``evaluate_layout_design_space``
                        / ``repro.layout.power.evaluate_layout_space``), NOT
                        flattened into the point axis: the closed-form
@@ -144,12 +147,22 @@ class DesignSpace:
         object.__setattr__(self, "layouts", _as_tuple(self.layouts, str))
         if not self.layouts:
             raise ValueError("layouts axis must be non-empty")
+        # Names resolve through get_layout so PARAMETRIC spellings —
+        # "pods{k}x{k}" (the free pod-count axis), "serpentine{f}" — are
+        # first-class axis values, not just registry entries.
         from repro.layout.geometry import LAYOUTS as _REGISTRY
+        from repro.layout.geometry import get_layout as _get_layout
 
-        unknown = [n for n in self.layouts if n not in _REGISTRY]
+        unknown = []
+        for n in self.layouts:
+            try:
+                _get_layout(n)
+            except (KeyError, ValueError):
+                unknown.append(n)
         if unknown:
             raise ValueError(
-                f"unknown layout families {unknown}; registered: {sorted(_REGISTRY)}"
+                f"unknown layout families {unknown}; registered: {sorted(_REGISTRY)}, "
+                "parametric: 'pods{k}x{k}', 'serpentine{f}'"
             )
         for name in ("rows", "cols", "input_bits"):
             vals = getattr(self, name)

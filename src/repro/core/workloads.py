@@ -23,6 +23,7 @@ from repro.core.switching import ActivityProfile, profile_gemm
 __all__ = [
     "ConvLayer",
     "Gemm",
+    "PodPartition",
     "RESNET50_TABLE1",
     "conv_to_gemm",
     "synth_activations",
@@ -33,6 +34,8 @@ __all__ = [
     "profile_network",
     "measured_design_activities",
     "measured_design_lane_activities",
+    "partition_gemm",
+    "design_pod_partition",
     "gemms_for_arch",
 ]
 
@@ -483,6 +486,193 @@ def measured_design_lane_activities(
         lane_h[:, point_class, :],
         lane_v[:, point_class, :],
     )
+
+
+# ---------------------------------------------------------------------------
+# GEMM partitioning across pods (the k-axis workload model)
+# ---------------------------------------------------------------------------
+#
+# A k x k multi-pod array can run a GEMM two ways:
+#
+#   * TILE-PARALLEL — each pod owns independent output tiles of its own
+#     (R/k) x (C/k) footprint.  The inter-pod trunks stay idle, but a GEMM
+#     deeper than R/k must accumulate across K passes through the memory
+#     system (drain + reload of every partial output per extra pass).
+#   * K-SPLIT — the k pods of a column cooperate on one output tile,
+#     splitting the K axis across pod rows; partial sums reduce in-array
+#     over the vertical reduction trunks (the full-width gutter-crossing
+#     segments the layout engine already prices), recovering the monolithic
+#     array's K capacity at the cost of trunk traffic.
+#
+# First-order model, one pass per (K window, N window): rounds count how
+# many full-array waves the job list needs; spilled words count off-array
+# partial-sum accumulation traffic (drain + reload ~ 2*rows hops per word);
+# trunk words count gutter crossings (1 hop per word).  The mode decision
+# minimizes rounds, then the wire-hop proxy.  Under OS both operands stream
+# over K temporally, so there is nothing to reduce across pods: pods only
+# ever run tile-parallel.  ``k=1`` degenerates to the monolithic array
+# (both modes identical, zero trunk/spill difference) — the same exactness
+# contract as ``MultiPodLayout(k=1)`` itself.
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPartition:
+    """How one GEMM maps onto a k x k podded array (see module comment)."""
+
+    gemm: Gemm
+    rows: int
+    cols: int
+    k: int
+    dataflow: str
+    mode: str  # "tile" | "ksplit"
+    rounds: int  # full-array waves over the job list
+    cycles: int  # rounds * streamed-axis length
+    utilization: float  # useful MACs / (rounds * R * C * stream)
+    spill_words: int  # off-array partial-sum accumulation traffic [words]
+    trunk_words: int  # inter-pod reduction-trunk crossings [words]
+
+
+def _ceil_div(a, b):
+    return -(-np.asarray(a, np.int64) // np.asarray(b, np.int64))
+
+
+def _partition_core(m, kdim, n, rows, cols, k, os_mask):
+    """Vectorized partition model; every argument broadcasts.
+
+    Returns dict of arrays: ksplit (bool), rounds, cycles, utilization,
+    spill_words, trunk_words — for the CHOSEN mode per cell.
+    """
+    m, kdim, n = (np.asarray(v, np.int64) for v in (m, kdim, n))
+    rows, cols, k = (np.asarray(v, np.int64) for v in (rows, cols, k))
+    os_mask = np.asarray(os_mask, bool)
+    pr = rows // k
+    pc = cols // k
+    stat = np.where(os_mask, m, kdim)  # rows-mapped stationary dim: K (WS), M (OS)
+    stream = np.where(os_mask, kdim, m)
+    macs = m * kdim * n
+
+    # tile-parallel: k^2 independent pods over ceil(stat/pr)*ceil(N/pc) jobs
+    passes_t = _ceil_div(stat, pr)
+    rounds_t = _ceil_div(passes_t * _ceil_div(n, pc), k * k)
+    spill_t = np.where(os_mask, 0, (_ceil_div(kdim, pr) - 1) * m * n)
+
+    # K-split (WS): K across the k pod rows, N across the k pod columns
+    passes_s = _ceil_div(stat, rows)
+    rounds_s = _ceil_div(passes_s * _ceil_div(n, pc), k)
+    spill_s = (_ceil_div(kdim, rows) - 1) * m * n
+    trunk_s = _ceil_div(kdim, rows) * m * n * (k - 1)
+
+    # wire-hop proxy: spilled words traverse the array twice (drain+reload),
+    # trunk words cross one gutter
+    cost_t = 2 * rows * spill_t
+    cost_s = 2 * rows * spill_s + trunk_s
+    ksplit = (~os_mask) & (
+        (rounds_s < rounds_t) | ((rounds_s == rounds_t) & (cost_s < cost_t))
+    )
+
+    rounds = np.where(ksplit, rounds_s, rounds_t)
+    cycles = rounds * stream
+    denom = rounds * rows * cols * stream
+    util = np.where(denom > 0, macs / np.maximum(denom, 1), 0.0)
+    return {
+        "ksplit": ksplit,
+        "rounds": rounds,
+        "cycles": cycles,
+        "utilization": util,
+        "spill_words": np.where(ksplit, spill_s, spill_t),
+        "trunk_words": np.where(ksplit, trunk_s, 0),
+    }
+
+
+def partition_gemm(
+    gemm: Gemm, rows: int, cols: int, k: int = 1, *, dataflow: str = "WS"
+) -> PodPartition:
+    """Partition one GEMM onto a k x k podded ``rows x cols`` array.
+
+    Picks tile-parallel vs K-split per the module's first-order cost model
+    and reports rounds/cycles/utilization plus the traffic the choice
+    implies.  ``utilization`` < 1 exposes ragged tiles and small GEMMs on
+    large arrays (the SISA scale-in argument for the free k axis).
+    """
+    if dataflow not in ("WS", "OS"):
+        raise ValueError("dataflow must be WS or OS")
+    if k < 1 or rows % k or cols % k:
+        raise ValueError(f"k={k} must tile the {rows}x{cols} array")
+    out = _partition_core(
+        gemm.m, gemm.k, gemm.n, rows, cols, k, dataflow == "OS"
+    )
+    return PodPartition(
+        gemm=gemm,
+        rows=int(rows),
+        cols=int(cols),
+        k=int(k),
+        dataflow=dataflow,
+        mode="ksplit" if bool(out["ksplit"]) else "tile",
+        rounds=int(out["rounds"]),
+        cycles=int(out["cycles"]),
+        utilization=float(out["utilization"]),
+        spill_words=int(out["spill_words"]),
+        trunk_words=int(out["trunk_words"]),
+    )
+
+
+def design_pod_partition(grid, layouts, gemms: Sequence[Gemm], weights=None):
+    """(L, P) partition statistics of a workload over a layout-axis grid.
+
+    For every (layout family, design point) cell, maps each GEMM with
+    ``partition_gemm`` (k from the family: ``MultiPodLayout.k``, else 1)
+    and aggregates across GEMMs with ``weights`` (default: MAC-weighted).
+    Returns dict of (L, P) arrays:
+
+      ``utilization``        weighted mean useful-MAC fraction,
+      ``ksplit_frac``        weighted fraction of GEMMs choosing K-split,
+      ``trunk_words_per_mac``/``spill_words_per_mac``  traffic intensities.
+
+    Cells where the family does not tile the grid get utilization 0 (the
+    layout evaluator already prices them infeasible); divide
+    ``bus_energy_per_mac_j`` by ``utilization`` to turn per-cycle power
+    into energy per USEFUL MAC.
+    """
+    from repro.layout.geometry import MultiPodLayout, get_layout, layout_feasible
+
+    gemms = list(gemms)
+    if not gemms:
+        raise ValueError("no gemms")
+    w = np.asarray(
+        weights if weights is not None else [g.macs for g in gemms], float
+    )
+    if w.shape != (len(gemms),) or w.sum() <= 0:
+        raise ValueError("weights must be positive per-GEMM values")
+    w = w / w.sum()
+
+    rows = np.asarray(grid.rows, np.int64)
+    cols = np.asarray(grid.cols, np.int64)
+    os_mask = np.asarray(grid.dataflow_os, bool)
+    names = tuple(layouts)
+    shape = (len(names), grid.n_points)
+    util = np.zeros(shape)
+    ksf = np.zeros(shape)
+    trunk = np.zeros(shape)
+    spill = np.zeros(shape)
+    for li, name in enumerate(names):
+        layout = get_layout(name)
+        k = layout.k if isinstance(layout, MultiPodLayout) else 1
+        feas = np.asarray(layout_feasible(layout, rows, cols), bool)
+        feas = np.broadcast_to(feas, rows.shape)
+        r_ok = np.where(feas, rows, k)  # placeholder rows on infeasible cells
+        c_ok = np.where(feas, cols, k)
+        for g, wt in zip(gemms, w):
+            out = _partition_core(g.m, g.k, g.n, r_ok, c_ok, k, os_mask)
+            util[li] += wt * np.where(feas, out["utilization"], 0.0)
+            ksf[li] += wt * np.where(feas, out["ksplit"], 0.0)
+            trunk[li] += wt * np.where(feas, out["trunk_words"] / g.macs, 0.0)
+            spill[li] += wt * np.where(feas, out["spill_words"] / g.macs, 0.0)
+    return {
+        "utilization": util,
+        "ksplit_frac": ksf,
+        "trunk_words_per_mac": trunk,
+        "spill_words_per_mac": spill,
+    }
 
 
 def gemms_for_arch(cfg, seq_len: int, batch: int = 1) -> list[Gemm]:

@@ -34,12 +34,20 @@ from repro.layout.geometry import (  # noqa: F401
     get_layout,
     layout_feasible,
     place_pes,
+    pod_layouts,
     register_layout,
 )
 from repro.layout.segments import (  # noqa: F401
     SegmentList,
     enumerate_segments,
     segment_class_coeffs,
+)
+from repro.layout.coeffs import (  # noqa: F401
+    LoweredCoeffs,
+    clear_coeff_cache,
+    coeff_cache_info,
+    lower_layout_coeffs,
+    set_coeff_cache_capacity,
 )
 from repro.layout.power import (  # noqa: F401
     LayoutPowerConfig,

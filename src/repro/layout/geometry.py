@@ -32,6 +32,7 @@ length closed form consume.
 from __future__ import annotations
 
 import dataclasses
+import re
 
 import numpy as np
 
@@ -43,6 +44,7 @@ __all__ = [
     "LAYOUTS",
     "register_layout",
     "get_layout",
+    "pod_layouts",
     "layout_feasible",
     "envelope_coeffs",
     "envelope",
@@ -55,6 +57,9 @@ __all__ = [
 # Deepest H-tree the closed-form length coefficients cover: 2^30 leaves is
 # far beyond any realizable PE grid.
 MAX_CLOCK_LEVELS = 30
+
+_PODS_RE = re.compile(r"pods(\d+)x(\d+)")
+_SERP_RE = re.compile(r"serpentine(\d+)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,14 +81,21 @@ class SerpentineLayout:
 
 @dataclasses.dataclass(frozen=True)
 class MultiPodLayout:
-    """k x k pod tiling with ``gutter_um`` inter-pod routing gutters."""
+    """k x k pod tiling with ``gutter_um`` inter-pod routing gutters.
+
+    ``k`` is a free integer axis (SISA-style scale-in): ``k=1`` is the
+    degenerate single-pod case and reduces EXACTLY to ``UniformLayout``
+    (no gutters, no trunk crossings, no top-level clock tree, no pod
+    accumulator narrowing) — which is what lets sweeps treat pod count as
+    one more grid dimension instead of a special case.
+    """
 
     k: int = 2
     gutter_um: float = 25.0
 
     def __post_init__(self) -> None:
-        if self.k < 2:
-            raise ValueError("multi-pod needs k >= 2 (k=1 is uniform)")
+        if self.k < 1:
+            raise ValueError("multi-pod needs k >= 1")
         if self.gutter_um < 0:
             raise ValueError("gutter_um must be non-negative")
 
@@ -107,14 +119,42 @@ def register_layout(name: str, layout: Layout) -> None:
 
 
 def get_layout(name_or_layout) -> Layout:
+    """Resolve a layout instance, registered name, or PARAMETRIC name.
+
+    Beyond the ``LAYOUTS`` registry, two parametric spellings resolve
+    without registration — they are what promotes the family parameter to
+    a free sweep axis:
+
+      * ``"pods{k}x{k}"``   -> ``MultiPodLayout(k=k)``      (k >= 1)
+      * ``"serpentine{f}"`` -> ``SerpentineLayout(folds=f)``(f >= 2)
+
+    Registered names win over parsing (so ``register_layout`` can pin a
+    non-default ``gutter_um`` under a parametric-looking name).
+    """
     if isinstance(name_or_layout, (UniformLayout, SerpentineLayout, MultiPodLayout)):
         return name_or_layout
     try:
         return LAYOUTS[name_or_layout]
-    except KeyError:
-        raise KeyError(
-            f"unknown layout {name_or_layout!r}; registered: {sorted(LAYOUTS)}"
-        ) from None
+    except (KeyError, TypeError):
+        pass
+    if isinstance(name_or_layout, str):
+        m = _PODS_RE.fullmatch(name_or_layout)
+        if m and m.group(1) == m.group(2):
+            return MultiPodLayout(k=int(m.group(1)))
+        m = _SERP_RE.fullmatch(name_or_layout)
+        if m:
+            return SerpentineLayout(folds=int(m.group(1)))
+    raise KeyError(
+        f"unknown layout {name_or_layout!r}; registered: {sorted(LAYOUTS)}, "
+        "parametric: 'pods{k}x{k}', 'serpentine{f}'"
+    )
+
+
+def pod_layouts(ks) -> tuple[str, ...]:
+    """Layout names for a free pod-count axis: ``pod_layouts((1, 2, 4))``
+    -> ``("pods1x1", "pods2x2", "pods4x4")`` — every name resolves through
+    ``get_layout`` without registration (``pods1x1`` == uniform)."""
+    return tuple(f"pods{int(k)}x{int(k)}" for k in ks)
 
 
 def layout_feasible(layout: Layout, rows, cols):

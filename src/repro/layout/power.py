@@ -60,15 +60,16 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.design_space import DesignGrid, _norm_activities
-from repro.core.floorplan import _xp, golden_section_minimize_arr
-from repro.layout.geometry import envelope_coeffs, get_layout
-from repro.layout.segments import (
-    DATA_NETS,
-    SEGMENT_CLASS_SCHEMA,
-    SegmentList,
-    enumerate_segments,
-    segment_class_coeffs,
+from repro.core.floorplan import _xp
+from repro.layout.coeffs import (
+    DATA_IS_H,
+    DEVICE_FIELDS,
+    OVER_IS_CLK,
+    OVER_IS_DRAIN,
+    OVER_IS_PRELOAD,
+    lower_layout_coeffs,
 )
+from repro.layout.segments import DATA_NETS, SegmentList, enumerate_segments
 
 try:  # jax accelerates the evaluator; same code runs in float64 numpy without it
     import jax
@@ -250,84 +251,217 @@ def segment_wirelength(layout, geom, aspect: float, *, dataflow: str = "WS") -> 
 # ---------------------------------------------------------------------------
 # Batched (design point x layout family) evaluator
 # ---------------------------------------------------------------------------
+#
+# The coefficient protocol: every family's data-net power at PE aspect r
+# collapses, per (workload, layout, point) cell, to a closed form in
+# t = sqrt(r)
+#
+#     f(t) = A*t + B/t + C + sum_r c_r * len_r(t) * relu(len_r(t) - s)
+#
+# where (A, B, C) fold every data class's count * activity * length
+# coefficients (alpha = len_w*sqrt(area) multiplies t, beta = len_h*
+# sqrt(area) multiplies 1/t), s is the repeater spacing, c_r = (overhead/s)
+# * count_r * act_r, and the sum runs over the FEW classes whose segments
+# can outgrow s inside the aspect window (``coeffs.rep_idx`` — an exact
+# prune, since len(t) is convex with its window maximum at an endpoint).
+#
+# f is globally convex in t: A*t + B/t + C is (A, B >= 0), and each
+# penalty term is x*relu(x - s) — convex nondecreasing — composed with the
+# convex positive len_r(t).  So the argmin needs no golden-section scan:
+# derivative-sign bisection (carrying just the bracket) plus a few clipped
+# Newton polish steps converges faster AND tighter, and the whole search
+# touches three scalars per cell per iteration instead of streaming the
+# full (layout, class, point) tensors.  That is the ~50x: the per-point
+# segment re-enumeration is gone (lowering is memoized + device-resident,
+# ``repro.layout.coeffs``) and the inner loop is arithmetic on collapsed
+# coefficients.
+#
+# The search runs over W+1 stacked slots: per-workload optima in slots
+# [0, W) and the workload-weighted robust objective in slot W (weighted
+# sums of (A, B, C, c_r) — the objective is linear in activity).  Both the
+# float64 numpy path and the jitted float32 path run the SAME algorithm.
 
 
-def _layout_eval_core(
-    count,  # (L, C, P)
-    len_w,
-    len_h,
-    len_c,
-    width,
-    act_data,  # (W, L, C, P) switching wires per transition, data classes only
-    act_over,  # (L, C, P) overhead classes only
-    rep_exempt,  # (L, C, P) 1.0 where repeater scaling is exempt (clk)
-    data_mask,  # (L, C, P) 1.0 on data-net (h/v) classes
-    pe_area,  # (P,)
-    log_lo,  # (L, P)
-    log_hi,
+def _search_iters(gss_iters: int) -> tuple[int, int]:
+    """Map the legacy ``gss_iters`` knob onto (bisection, newton) counts.
+
+    Kept as the API/sweep-spec knob for compatibility: 64 "iterations"
+    resolve to a 2^-16 bracket plus 3 Newton steps — tighter than GSS-64
+    (Newton is quadratic on the convex objective) at a quarter of the
+    derivative evaluations.
+    """
+    return max(8, min(int(gss_iters) // 4, 24)), 3
+
+
+def _lane_gather(xp, lanes, lane0_d, width_d):
+    """Per-class lane-sum: sum(lanes[lane0 : lane0+width]) via one cumsum.
+
+    ``lanes`` (W, P, n); ``lane0_d``/``width_d`` (L, Cd, P).  Returns
+    (W, L, Cd, P).
+    """
+    n = lanes.shape[-1]
+    cs = xp.cumsum(lanes, axis=-1)
+    cs = xp.concatenate([xp.zeros(lanes.shape[:-1] + (1,), cs.dtype), cs], axis=-1)
+    lo = xp.clip(lane0_d, 0, n)
+    hi = xp.clip(lo + width_d.astype(lane0_d.dtype), 0, n)
+    cs_e = cs[:, None, None, :, :]  # (W, 1, 1, P, n+1)
+    take = lambda idx: xp.take_along_axis(cs_e, idx[None, ..., None], axis=-1)[..., 0]
+    return take(hi) - take(lo)
+
+
+def _fold_data_activities(xp, a_h, a_v, h_lanes, v_lanes, width_d, lane0_d):
+    """Switching wires per transition for every data class: (W, L, Cd, P).
+
+    Aggregate path: ``a * width`` (the mean-lane approximation); per-lane
+    path: the cumsum-gather over the class's lane range — both inside the
+    jitted program, so lane profiles ride the same compiled evaluator.
+    """
+    is_h = DATA_IS_H.reshape(1, 1, -1, 1)
+    if h_lanes is None:
+        act_h = a_h[:, None, None, :] * width_d[None]
+    else:
+        act_h = _lane_gather(xp, h_lanes, lane0_d, width_d)
+    if v_lanes is None:
+        act_v = a_v[:, None, None, :] * width_d[None]
+    else:
+        act_v = _lane_gather(xp, v_lanes, lane0_d, width_d)
+    return is_h * act_h + (1.0 - is_h) * act_v
+
+
+def _coeff_eval_core(
+    count_d,  # (L, Cd, P) data-class counts
+    alpha_d,  # (L, Cd, P) len(t) = alpha*t + beta/t + gamma
+    beta_d,
+    gamma_d,
+    ca,  # (L, Cd, P) count * alpha   (linear-collapse products)
+    cb,
+    cg,
+    cwidth_d,  # (L, Cd, P) count * width (wirelength roll-up)
+    width_d,  # (L, Cd, P)
+    lane0_d,  # (L, Cd, P) int
+    count_o,  # (L, Co, P) overhead-class tensors
+    width_o,
+    alpha_o,
+    beta_o,
+    gamma_o,
+    t_lo,  # (L, P) sqrt-aspect window
+    t_hi,
+    a_h,  # (W, P) aggregate activities
+    a_v,
+    h_lanes,  # (W, P, n) or None
+    v_lanes,
     weights,  # (W,)
     vdd,
     freq_hz,
     wire_cap,
     spacing,
     overhead,
+    preload_coef,  # preload_duty * preload_activity
+    drain_coef,
+    clk_coef,
     *,
-    gss_iters: int,
+    rep_idx: tuple,
+    nb: int,
+    nn: int,
 ):
-    xp = _xp(count, act_data)
+    xp = _xp(ca, a_h)
     pref = 0.5 * wire_cap * vdd * vdd * freq_hz
 
-    def caps(log_r, act):
-        # log_r: (..., L, P) -> per-class lengths at that aspect
-        r = xp.exp(log_r)
-        w_pe = xp.sqrt(pe_area * r)
-        h_pe = xp.sqrt(pe_area / r)
-        ln = len_w * w_pe[..., None, :] + len_h * h_pe[..., None, :] + len_c
-        rep = 1.0 + (1.0 - rep_exempt) * overhead * xp.maximum(ln / spacing - 1.0, 0.0)
-        return xp.sum(count * ln * rep * act, axis=-2)  # reduce the class axis
+    act = _fold_data_activities(xp, a_h, a_v, h_lanes, v_lanes, width_d, lane0_d)
+    wcol = weights[:, None, None]
 
-    # Per-(workload, layout, point) optimum of the data-net power.
-    lo_w = log_lo[None] + 0.0 * act_data[:, :, 0]  # (W, L, P)
-    hi_w = log_hi[None]
-    log_opt = golden_section_minimize_arr(
-        lambda lr: caps(lr, act_data), lo_w, hi_w, iters=gss_iters, xp=xp
+    def stack(arr):  # (W, L, P) -> (W+1, L, P): per-workload slots + weighted
+        return xp.concatenate([arr, xp.sum(wcol * arr, axis=0, keepdims=True)], 0)
+
+    As = stack(xp.sum(act * ca[None], axis=2))
+    Bs = stack(xp.sum(act * cb[None], axis=2))
+    Cs = stack(xp.sum(act * cg[None], axis=2))
+    kap = overhead / spacing
+    reps = [
+        (
+            alpha_d[:, j],
+            beta_d[:, j],
+            gamma_d[:, j],
+            stack(kap * count_d[:, j][None] * act[:, :, j]),
+        )
+        for j in rep_idx
+    ]
+
+    def grad(t):
+        v = 1.0 / t
+        v2 = v * v
+        v3 = v2 * v
+        g = As - Bs * v2
+        h = 2.0 * Bs * v3
+        for al, be, ga, crs in reps:
+            ln = al * t + be * v + ga
+            d = al - be * v2
+            on = ln > spacing
+            g = g + xp.where(on, crs * (2.0 * ln - spacing) * d, 0.0)
+            h = h + xp.where(
+                on, crs * (2.0 * d * d + (2.0 * ln - spacing) * 2.0 * be * v3), 0.0
+            )
+        return g, h
+
+    # Derivative-sign bisection: f is convex, so sign(f') brackets the argmin.
+    a = t_lo[None] + 0.0 * As
+    b = t_hi[None] + 0.0 * As
+    for _ in range(nb):
+        m = 0.5 * (a + b)
+        g, _ = grad(m)
+        pos = g > 0.0
+        a = xp.where(pos, a, m)
+        b = xp.where(pos, m, b)
+    x = 0.5 * (a + b)
+    # Clipped Newton polish inside the (still-shrinking) bracket.
+    for _ in range(nn):
+        g, h = grad(x)
+        pos = g > 0.0
+        a = xp.where(pos, a, x)
+        b = xp.where(pos, x, b)
+        xn = x - g / xp.maximum(h, 1e-30)
+        xn = xp.clip(xn, a, b)
+        x = xp.where(xp.isfinite(xn), xn, 0.5 * (a + b))
+
+    f = As * x + Bs / x + Cs
+    for al, be, ga, crs in reps:
+        ln = al * x + be / x + ga
+        f = f + crs * ln * xp.maximum(ln - spacing, 0.0)
+    aspect = x * x
+
+    # Overhead nets + wirelength: one full-schema evaluation at the robust
+    # aspect (slot W) — outside the search loop, so no collapse needed.
+    tr = x[-1][:, None, :]  # (L, 1, P)
+    ln_o = alpha_o * tr + beta_o / tr + gamma_o
+    exempt = OVER_IS_CLK.reshape(1, -1, 1)  # clk trees are explicitly buffered
+    rep_o = 1.0 + (1.0 - exempt) * overhead * xp.maximum(ln_o / spacing - 1.0, 0.0)
+    act_o = width_o * (
+        OVER_IS_PRELOAD.reshape(1, -1, 1) * preload_coef
+        + OVER_IS_DRAIN.reshape(1, -1, 1) * drain_coef
+        + exempt * clk_coef
     )
-    aspect_opt = xp.exp(log_opt)
-    bus_power_opt = pref * caps(log_opt, act_data)
-
-    # Robust (workload-weighted) aspect per (layout, point).
-    w_col = weights[:, None, None]
-
-    def weighted(log_r):
-        return xp.sum(w_col * caps(log_r[None], act_data), axis=0)
-
-    log_rob = golden_section_minimize_arr(
-        weighted, log_lo, log_hi, iters=gss_iters, xp=xp
-    )
-    aspect_robust = xp.exp(log_rob)
-    bus_power_robust = pref * weighted(log_rob)
-    overhead_w = pref * caps(log_rob, act_over)
-
-    # Data-net wirelength (um of wire) at the robust aspect.
-    r = xp.exp(log_rob)
-    w_pe = xp.sqrt(pe_area * r)
-    h_pe = xp.sqrt(pe_area / r)
-    ln = len_w * w_pe[..., None, :] + len_h * h_pe[..., None, :] + len_c
-    wirelength = xp.sum(data_mask * count * ln * width, axis=-2)
+    overhead_w = pref * xp.sum(count_o * ln_o * rep_o * act_o, axis=1)
+    ln_d = alpha_d * tr + beta_d / tr + gamma_d
+    wirelength = xp.sum(cwidth_d * ln_d, axis=1)
 
     return {
-        "aspect_opt": aspect_opt,
-        "bus_power_opt": bus_power_opt,
-        "aspect_robust": aspect_robust,
-        "bus_power_robust": bus_power_robust,
+        "aspect_opt": aspect[:-1],
+        "bus_power_opt": pref * f[:-1],
+        "aspect_robust": aspect[-1],
+        "bus_power_robust": pref * f[-1],
         "overhead_w": overhead_w,
         "wirelength_um": wirelength,
     }
 
 
-@functools.lru_cache(maxsize=8)
-def _jitted_layout_eval(gss_iters: int):
-    return jax.jit(functools.partial(_layout_eval_core, gss_iters=gss_iters))
+@functools.lru_cache(maxsize=32)
+def _jitted_coeff_eval(rep_idx: tuple, nb: int, nn: int, donate: bool):
+    fn = functools.partial(_coeff_eval_core, rep_idx=rep_idx, nb=nb, nn=nn)
+    if donate:
+        # Chunked sweeps slice fresh per-chunk coefficient buffers; donating
+        # them lets XLA reuse the allocations instead of doubling footprint.
+        return jax.jit(fn, donate_argnums=tuple(range(len(DEVICE_FIELDS))))
+    return jax.jit(fn)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,99 +565,48 @@ def evaluate_layout_space(
         return LayoutSpaceEval(
             grid=grid, layouts=layout_names, sweep_report=report, **out
         )
-    rows = np.asarray(grid.rows, float)
-    cols = np.asarray(grid.cols, float)
-    b_h = np.asarray(grid.b_h, float)
-    b_v = np.asarray(grid.b_v, float)
-    os_mask = np.asarray(grid.dataflow_os, bool)
-    n_cls = len(SEGMENT_CLASS_SCHEMA)
-    nets = np.asarray([net for net, _ in SEGMENT_CLASS_SCHEMA])
-    n_l = len(layout_names)
-
-    count = np.zeros((n_l, n_cls, p))
-    len_w_ = np.zeros_like(count)
-    len_h_ = np.zeros_like(count)
-    len_c_ = np.zeros_like(count)
-    width = np.zeros_like(count)
-    rep_exempt = np.zeros_like(count)
-    data_mask = np.zeros_like(count)
-    act_data = np.zeros((n_w, n_l, n_cls, p))
-    act_over = np.zeros((n_l, n_cls, p))
-    feasible = np.zeros((n_l, p), bool)
-    lo = np.zeros((n_l, p))
-    hi = np.zeros((n_l, p))
-
-    for li, name in enumerate(layout_names):
-        layout = get_layout(name)
-        cc = segment_class_coeffs(layout, rows, cols, b_h, b_v, os_mask)
-        count[li] = cc["count"]
-        len_w_[li] = cc["len_w"]
-        len_h_[li] = cc["len_h"]
-        len_c_[li] = cc["len_c"]
-        width[li] = cc["width"]
-        rep_exempt[li] = (nets == "clk")[:, None].astype(float)
-        data_mask[li] = np.isin(nets, DATA_NETS)[:, None].astype(float)
-        for ci, (net, _) in enumerate(SEGMENT_CLASS_SCHEMA):
-            wdt = cc["width"][ci]
-            ln0 = cc["lane0"][ci]
-            if net == "h":
-                act_data[:, li, ci] = _lane_sum(h_lanes, ln0, wdt, a_h, None)
-            elif net == "v":
-                act_data[:, li, ci] = _lane_sum(v_lanes, ln0, wdt, a_v, None)
-            elif net == "preload":
-                act_over[li, ci] = cfg.preload_duty * cfg.preload_activity * wdt
-            elif net == "drain":
-                act_over[li, ci] = cfg.drain_duty * cfg.drain_activity * wdt
-            else:  # clk
-                act_over[li, ci] = cfg.clock_toggles_per_cycle * wdt
-
-        # Aspect window: PE envelope intersected with the die-envelope
-        # constraint (gutter constants neglected in the bound — they are
-        # small against the array span and only loosen it marginally).
-        ew_w, _, eh_h, _ = envelope_coeffs(layout, rows, cols)
-        l_lo = np.full(p, float(grid.aspect_lo))
-        l_hi = np.full(p, float(grid.aspect_hi))
-        if cfg.max_envelope_aspect is not None:
-            e = float(cfg.max_envelope_aspect)
-            if e < 1.0:
-                raise ValueError("max_envelope_aspect must be >= 1")
-            ratio = ew_w / eh_h
-            l_lo = np.maximum(l_lo, 1.0 / (e * ratio))
-            l_hi = np.minimum(l_hi, e / ratio)
-        ok = np.asarray(cc["feasible"], bool) & (l_lo < l_hi)
-        feasible[li] = ok
-        lo[li] = np.where(ok, l_lo, 1.0)
-        hi[li] = np.where(ok, l_hi, 1.0 + 1e-9)
-
+    coeffs = lower_layout_coeffs(
+        grid,
+        layout_names,
+        max_envelope_aspect=cfg.max_envelope_aspect,
+        repeater_spacing_um=cfg.repeater_spacing_um,
+    )
     use_jit = _HAS_JAX if use_jit is None else use_jit
     if use_jit and not _HAS_JAX:
         raise RuntimeError("use_jit=True but jax is not importable")
-    fn = (
-        _jitted_layout_eval(gss_iters)
-        if use_jit
-        else functools.partial(_layout_eval_core, gss_iters=gss_iters)
-    )
-    out = fn(
-        count,
-        len_w_,
-        len_h_,
-        len_c_,
-        width,
-        act_data,
-        act_over,
-        rep_exempt,
-        data_mask,
-        np.asarray(grid.pe_area_um2, float),
-        np.log(lo),
-        np.log(hi),
-        w,
+    nb, nn = _search_iters(gss_iters)
+    scalars = (
         cfg.vdd,
         cfg.freq_hz,
         cfg.wire_cap_f_per_um,
         cfg.repeater_spacing_um,
         cfg.repeater_overhead,
+        cfg.preload_duty * cfg.preload_activity,
+        cfg.drain_duty * cfg.drain_activity,
+        cfg.clock_toggles_per_cycle,
     )
+    if use_jit:
+        fn = _jitted_coeff_eval(coeffs.rep_idx, nb, nn, False)
+        t = coeffs.device()
+        out = fn(
+            *(t[k] for k in DEVICE_FIELDS), a_h, a_v, h_lanes, v_lanes, w, *scalars
+        )
+    else:
+        t = coeffs.host
+        out = _coeff_eval_core(
+            *(t[k] for k in DEVICE_FIELDS),
+            a_h,
+            a_v,
+            h_lanes,
+            v_lanes,
+            w,
+            *scalars,
+            rep_idx=coeffs.rep_idx,
+            nb=nb,
+            nn=nn,
+        )
     out = {k: np.asarray(v, float) for k, v in out.items()}
+    feasible = coeffs.host["feasible"]
     bad = ~feasible
     for key in ("bus_power_robust", "overhead_w", "wirelength_um"):
         out[key] = np.where(bad, np.inf, out[key])
@@ -532,7 +615,7 @@ def evaluate_layout_space(
         grid=grid,
         layouts=layout_names,
         feasible=feasible,
-        aspect_lo=lo,
-        aspect_hi=hi,
+        aspect_lo=coeffs.host["lo"],
+        aspect_hi=coeffs.host["hi"],
         **out,
     )

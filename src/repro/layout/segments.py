@@ -176,11 +176,12 @@ def enumerate_segments(
 
     k = layout.k if isinstance(layout, MultiPodLayout) else 1
     pod_rows = rows // k
-    # Pod-local accumulator narrowing is a MULTI-POD property: other families
-    # carry the caller's b_v on every interior hop (the closed-form contract).
+    # Pod-local accumulator narrowing is a MULTI-POD property (k >= 2): other
+    # families — including the degenerate pods1x1 — carry the caller's b_v on
+    # every interior hop (the closed-form contract).
     b_v_in = (
         int(pod_accumulator_bits(b_h, b_v, rows, k))
-        if dataflow == "WS" and isinstance(layout, MultiPodLayout)
+        if dataflow == "WS" and isinstance(layout, MultiPodLayout) and k > 1
         else b_v
     )
     drain_w = int(os_drain_bits(b_h, rows))
@@ -239,7 +240,10 @@ def enumerate_segments(
 
     if "clk" in nets:
         we, he = envelope(layout, rows, cols, w, h)
-        if isinstance(layout, MultiPodLayout):
+        # k == 1 falls through to the single-tree branch: one pod IS the
+        # array, and a top-level tree over one center would add a spurious
+        # We/2 bar that breaks pods1x1 == uniform.
+        if isinstance(layout, MultiPodLayout) and k > 1:
             top = int(clock_tree_depth(k * k))
             for x0, y0, x1, y1 in htree_segments(we / 2, he / 2, we, he, top):
                 emit("clk", "spine", x0, y0, x1, y1, 1)
@@ -325,12 +329,12 @@ def segment_class_coeffs(layout, rows, cols, b_h, b_v, dataflow_os, *_, **__):
         nx_h, nx_v, g = float(layout.folds), 1.0, 0.0
     elif isinstance(layout, MultiPodLayout):
         nx_h = nx_v = float(layout.k)
-        g = layout.gutter_um
+        g = layout.gutter_um if layout.k > 1 else 0.0  # k=1: no gutters exist
     else:
         nx_h = nx_v = 1.0
         g = 0.0
 
-    if isinstance(layout, MultiPodLayout):
+    if isinstance(layout, MultiPodLayout) and layout.k > 1:
         b_v_in = np.where(
             os_mask, b_v, pod_accumulator_bits(b_h, b_v, rows, layout.k).astype(float)
         )
@@ -350,7 +354,7 @@ def segment_class_coeffs(layout, rows, cols, b_h, b_v, dataflow_os, *_, **__):
     put(0, rows * cols - rows * (nx_h - 1), 1.0, 0.0, 0.0, b_h)
     if isinstance(layout, SerpentineLayout):
         put(1, rows * (nx_h - 1), 0.0, rows, 0.0, b_h)  # turnaround: R*H
-    elif isinstance(layout, MultiPodLayout):
+    elif isinstance(layout, MultiPodLayout) and layout.k > 1:
         put(1, rows * (nx_h - 1), 1.0, 0.0, g, b_h)  # gutter crossing: W+g
 
     # v geometry (shared by v / preload / drain): per column, (R - nx_v)
@@ -367,7 +371,9 @@ def segment_class_coeffs(layout, rows, cols, b_h, b_v, dataflow_os, *_, **__):
 
     # clk: one class whose "length" is the whole spine.
     ew_w, ew_c, eh_h, eh_c = envelope_coeffs(layout, rows, cols)
-    if isinstance(layout, MultiPodLayout):
+    # k == 1: no top-level tree — the single "pod" subtree is the whole
+    # array's H-tree, making pods1x1 coefficient-identical to uniform.
+    if isinstance(layout, MultiPodLayout) and layout.k > 1:
         kk = layout.k
         cw_t, ch_t = clock_tree_coeffs(np.full(p, int(clock_tree_depth(kk * kk))))
         pod_leaves = np.maximum((rows // kk) * (cols // kk), 1).astype(np.int64)

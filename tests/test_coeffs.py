@@ -1,0 +1,306 @@
+"""Coefficient-protocol parity: lowering cache + evaluator vs enumeration.
+
+The contract under test: for ANY (family, k, point, activity, config) cell,
+the coefficient evaluator's converged outputs — per-workload optima, the
+robust aspect's data-net power, the duty-cycled overhead nets (WS preload
+chain, OS drain chain, clock spine), the wirelength roll-up — equal the
+explicit ``SegmentList`` enumeration re-priced at the same aspects to f64
+round-off (<= 1e-12 relative).  Cells are drawn over pods k outside {2, 4}
+as well (the free-k-axis claim), serpentine folds, both dataflows, and the
+per-lane activity path.
+
+The property runs twice: once under hypothesis (skipped gracefully where
+hypothesis isn't installed — see ``tests/_hyp.py``) and once as a seeded
+deterministic sweep so the parity claim is ALWAYS exercised.
+"""
+
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.design_space import DesignSpace
+from repro.core.floorplan import BusActivity
+from repro.core.workloads import Gemm, design_pod_partition, partition_gemm
+from repro.layout import (
+    LayoutPowerConfig,
+    clear_coeff_cache,
+    coeff_cache_info,
+    evaluate_layout_space,
+    get_layout,
+    lower_layout_coeffs,
+    pod_layouts,
+    segment_bus_power,
+    segment_wirelength,
+    set_coeff_cache_capacity,
+)
+from repro.layout.power import rollup_segments
+from repro.layout.segments import enumerate_segments
+
+RTOL = 1e-12
+
+
+def _cell_grid(rows, cols, bits, dataflow, area):
+    return DesignSpace(
+        rows=(rows,),
+        cols=(cols,),
+        input_bits=(bits,),
+        dataflows=(dataflow,),
+        pe_area_um2=(area,),
+    ).expand()
+
+
+def _check_cell(layout_name, rows, cols, bits, dataflow, area, a_h, a_v, rng):
+    """Coefficient evaluator vs explicit enumeration on one cell, f64."""
+    grid = _cell_grid(rows, cols, bits, dataflow, area)
+    layout = get_layout(layout_name)
+    # duty-cycled overhead nets ON so preload/drain/clk parity is exercised
+    cfg = LayoutPowerConfig(
+        preload_duty=float(rng.uniform(0.01, 0.2)),
+        drain_duty=float(rng.uniform(0.01, 0.2)),
+    )
+    lanes = bool(rng.random() < 0.5)
+    h_lanes = v_lanes = None
+    if lanes:
+        n = 64
+        h_lanes = np.zeros((2, 1, n))
+        v_lanes = np.zeros((2, 1, n))
+        b_v = int(grid.b_v[0])
+        h_lanes[:, 0, :bits] = rng.uniform(0.0, 1.0, (2, bits))
+        v_lanes[:, 0, :b_v] = rng.uniform(0.0, 1.0, (2, b_v))
+    w = rng.uniform(0.2, 1.0, 2)
+    ev = evaluate_layout_space(
+        grid,
+        np.asarray([[a_h], [a_h * 0.6]]),
+        np.asarray([[a_v], [a_v * 1.3]]),
+        layouts=(layout_name,),
+        h_lanes=h_lanes,
+        v_lanes=v_lanes,
+        weights=w,
+        cfg=cfg,
+        use_jit=False,
+    )
+    assert ev.feasible[0, 0]
+    geom = grid.geometry(0)
+    acts = [BusActivity(a_h, a_v), BusActivity(a_h * 0.6, a_v * 1.3)]
+    w = w / w.sum()
+
+    # per-workload optima re-priced through the explicit segment enumeration
+    for wi, act in enumerate(acts):
+        asp = float(ev.aspect_opt[wi, 0, 0])
+        ref = segment_bus_power(
+            layout,
+            geom,
+            act,
+            asp,
+            dataflow=dataflow,
+            h_lanes=None if h_lanes is None else h_lanes[wi, 0],
+            v_lanes=None if v_lanes is None else v_lanes[wi, 0],
+            cfg=cfg,
+        )
+        got = float(ev.bus_power_opt[wi, 0, 0])
+        assert got == pytest.approx(ref, rel=RTOL)
+
+    # robust-aspect weighted data power, overhead nets, wirelength
+    asp_r = float(ev.aspect_robust[0, 0])
+    ref_rob = sum(
+        wv
+        * segment_bus_power(
+            layout,
+            geom,
+            act,
+            asp_r,
+            dataflow=dataflow,
+            h_lanes=None if h_lanes is None else h_lanes[wi, 0],
+            v_lanes=None if v_lanes is None else v_lanes[wi, 0],
+            cfg=cfg,
+        )
+        for wi, (wv, act) in enumerate(zip(w, acts))
+    )
+    assert float(ev.bus_power_robust[0, 0]) == pytest.approx(ref_rob, rel=RTOL)
+
+    segs = enumerate_segments(
+        layout,
+        geom.rows,
+        geom.cols,
+        geom.b_h,
+        geom.b_v,
+        geom.pe_area_um2,
+        asp_r,
+        dataflow=dataflow,
+        nets=("preload", "drain", "clk"),
+    )
+    ref_ov = rollup_segments(segs, 0.0, 0.0, cfg=cfg)["overhead_w"]
+    assert float(ev.overhead_w[0, 0]) == pytest.approx(ref_ov, rel=RTOL, abs=1e-18)
+    ref_wl = segment_wirelength(layout, geom, asp_r, dataflow=dataflow)
+    assert float(ev.wirelength_um[0, 0]) == pytest.approx(ref_wl, rel=RTOL)
+
+
+_FAMILIES = (
+    ("uniform", 1),
+    ("serpentine2", 2),
+    ("serpentine4", 4),
+    ("pods1x1", 1),
+    ("pods2x2", 2),
+    ("pods3x3", 3),
+    ("pods4x4", 4),
+    ("pods5x5", 5),
+    ("pods8x8", 8),
+)
+
+
+def _random_cell(rng):
+    name, div = _FAMILIES[int(rng.integers(len(_FAMILIES)))]
+    rows = div * int(rng.integers(1, 7))
+    cols = div * int(rng.integers(1, 7))
+    if name.startswith("serpentine"):
+        rows = int(rng.integers(2, 33))
+    bits = int(rng.integers(4, 17))
+    dataflow = "OS" if rng.random() < 0.5 else "WS"
+    area = float(rng.uniform(200.0, 3000.0))
+    a_h = float(rng.uniform(0.02, 0.6))
+    a_v = float(rng.uniform(0.02, 0.6))
+    return name, rows, cols, bits, dataflow, area, a_h, a_v
+
+
+def test_coeff_matches_segment_rollup_seeded():
+    """Deterministic property sweep: 24 random cells, every family class."""
+    rng = np.random.default_rng(1234)
+    seen = set()
+    for _ in range(24):
+        cell = _random_cell(rng)
+        seen.add(cell[0])
+        _check_cell(*cell, rng)
+    # the draw must actually cover non-{2,4} pod counts
+    assert seen & {"pods3x3", "pods5x5", "pods8x8"}
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_coeff_matches_segment_rollup_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    _check_cell(*_random_cell(rng), rng)
+
+
+def test_pods1x1_equals_uniform_through_evaluator():
+    grid = DesignSpace(
+        rows=(8, 16), cols=(8, 32), input_bits=(8,), dataflows=("WS", "OS"),
+        pe_area_um2=(900.0,),
+    ).expand()
+    ev = evaluate_layout_space(
+        grid, 0.3, 0.2, layouts=("uniform", "pods1x1"), use_jit=False
+    )
+    for f in ("aspect_robust", "bus_power_robust", "overhead_w", "wirelength_um"):
+        np.testing.assert_array_equal(getattr(ev, f)[0], getattr(ev, f)[1])
+
+
+def test_k_axis_rides_the_layout_axis():
+    """pod_layouts names resolve as a DesignSpace layout axis and evaluate."""
+    space = DesignSpace(
+        rows=(24,), cols=(24,), input_bits=(8,), pe_area_um2=(900.0,),
+        layouts=("uniform",) + pod_layouts((2, 3)),
+    )
+    ev = evaluate_layout_space(
+        space.expand(), 0.3, 0.25, layouts=space.layouts, use_jit=False
+    )
+    assert ev.feasible.all()
+    assert ev.layouts == ("uniform", "pods2x2", "pods3x3")
+    with pytest.raises(ValueError, match="unknown layout"):
+        DesignSpace(rows=(8,), cols=(8,), layouts=("pods2x3",))
+
+
+def test_coeff_cache_counters_and_eviction():
+    grid = _cell_grid(8, 8, 8, "WS", 900.0)
+    grid2 = _cell_grid(8, 16, 8, "WS", 900.0)
+    clear_coeff_cache()
+    prev = set_coeff_cache_capacity(1)
+    try:
+        c1 = lower_layout_coeffs(grid, ("uniform",))
+        assert lower_layout_coeffs(grid, ("uniform",)) is c1
+        info = coeff_cache_info()
+        assert (info["hits"], info["misses"], info["size"]) == (1, 1, 1)
+        lower_layout_coeffs(grid2, ("uniform",))  # evicts the first entry
+        assert coeff_cache_info()["evictions"] == 1
+        c3 = lower_layout_coeffs(grid, ("uniform",))
+        assert c3 is not c1
+        assert coeff_cache_info()["misses"] == 3
+        # content key covers family params: same name, different instance
+        from repro.layout import LAYOUTS, MultiPodLayout, register_layout
+
+        register_layout("podsX", MultiPodLayout(k=2, gutter_um=10.0))
+        try:
+            ca = lower_layout_coeffs(grid, ("podsX",))
+            register_layout("podsX", MultiPodLayout(k=2, gutter_um=99.0))
+            cb = lower_layout_coeffs(grid, ("podsX",))
+            assert ca.key != cb.key
+        finally:
+            del LAYOUTS["podsX"]
+    finally:
+        set_coeff_cache_capacity(prev)
+        clear_coeff_cache()
+
+
+def test_repeater_prune_is_exact():
+    """Classes pruned from rep_idx never exceed the spacing in-window."""
+    grid = DesignSpace(
+        rows=(8, 32), cols=(8, 64), input_bits=(8,), dataflows=("WS",),
+        pe_area_um2=(400.0, 2500.0),
+    ).expand()
+    c = lower_layout_coeffs(grid, ("uniform", "serpentine2", "pods2x2"))
+    h = c.host
+    for j in range(h["alpha_d"].shape[1]):
+        ln_ends = np.maximum(
+            h["alpha_d"][:, j] * h["t_lo"] + h["beta_d"][:, j] / h["t_lo"]
+            + h["gamma_d"][:, j],
+            h["alpha_d"][:, j] * h["t_hi"] + h["beta_d"][:, j] / h["t_hi"]
+            + h["gamma_d"][:, j],
+        )
+        live = h["feasible"] & (h["count_d"][:, j] > 0)
+        if j not in c.rep_idx:
+            assert not (ln_ends[live] > 200.0).any()
+
+
+# ---------------------------------------------------------------------------
+# GEMM partitioning across pods
+# ---------------------------------------------------------------------------
+
+
+def test_partition_deep_k_prefers_ksplit():
+    p = partition_gemm(Gemm("g", m=256, k=64, n=16), 32, 32, k=2)
+    assert p.mode == "ksplit"
+    assert p.trunk_words > 0
+    # in-array reduction halves the off-array accumulation passes
+    t = partition_gemm(Gemm("g", m=256, k=64, n=16), 32, 32, k=1)
+    assert p.spill_words <= t.spill_words
+
+
+def test_partition_small_ragged_underutilizes_large_arrays():
+    small = Gemm("g", m=100, k=20, n=20)
+    u32 = partition_gemm(small, 32, 32, k=1).utilization
+    u128 = partition_gemm(small, 128, 128, k=4).utilization
+    assert u128 < u32 < 1.0
+    # exact-fit divisible GEMM fully utilizes
+    assert partition_gemm(Gemm("g", m=64, k=32, n=32), 32, 32, k=2).utilization == 1.0
+
+
+def test_partition_degeneracies():
+    g = Gemm("g", m=64, k=64, n=64)
+    k1 = partition_gemm(g, 32, 32, k=1)
+    assert k1.trunk_words == 0
+    os_ = partition_gemm(g, 32, 32, k=4, dataflow="OS")
+    assert os_.mode == "tile" and os_.trunk_words == 0 and os_.spill_words == 0
+    with pytest.raises(ValueError):
+        partition_gemm(g, 30, 32, k=4)
+
+
+def test_design_pod_partition_grid():
+    grid = DesignSpace(
+        rows=(16, 32), cols=(16, 32), input_bits=(8,), dataflows=("WS", "OS"),
+        pe_area_um2=(900.0,),
+    ).expand()
+    gemms = [Gemm("a", 64, 128, 64), Gemm("b", 50, 20, 30)]
+    stats = design_pod_partition(grid, ("uniform",) + pod_layouts((1, 2)), gemms)
+    util = stats["utilization"]
+    assert util.shape == (3, grid.n_points)
+    np.testing.assert_array_equal(util[0], util[1])  # pods1x1 == uniform
+    assert (util > 0).all() and (util <= 1.0).all()
+    assert (stats["trunk_words_per_mac"][:2] == 0).all()

@@ -70,8 +70,10 @@ def test_registry_families():
         register_layout("bad", object())
     with pytest.raises(ValueError):
         SerpentineLayout(folds=1)
+    # k=1 is the legal degenerate single-pod case (== uniform); k=0 is not
+    assert isinstance(MultiPodLayout(k=1), MultiPodLayout)
     with pytest.raises(ValueError):
-        MultiPodLayout(k=1)
+        MultiPodLayout(k=0)
 
 
 def test_feasibility_divisibility():
