@@ -1,0 +1,126 @@
+"""Fused fleet J/op objective: throughput floor and ranking flips.
+
+Two checks, each a CSV/JSON row:
+
+  * ``objective/engine`` — warm throughput of the fused J/op program
+    (wire power + clock spine + calibrated static + partition-lowered
+    utilization/spill/trunk pricing, coding axis included) in
+    (design point x layout family) cells/s over the PR-8 fleet grid
+    extended with the bus-invert axis.  Asserts >= 10^6 cells/s warm with
+    jax (10^4 on the numpy fallback) — the committed perf floor; the CI
+    ``perf-floor`` job fails on regression.  Runs fleet-scale even under
+    ``--smoke``: tiny grids are dispatch-bound and can't witness the floor.
+  * ``objective/winner_flips`` — cells (workload x design point) where the
+    J/op-optimal layout family differs from the bus-power-optimal one.
+    Asserts >= 1: utilization and spill/trunk traffic must flip at least
+    one ranking, or the fused objective adds nothing over wire power —
+    the paper's scale-in argument as a tracked number.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.design_space import DesignSpace
+from repro.core.objective import evaluate_fleet_objective
+from repro.core.workloads import RESNET50_TABLE1, conv_to_gemm
+from repro.layout import pod_layouts
+from repro.layout.power import _HAS_JAX
+
+try:
+    from benchmarks.bench_layout import THROUGHPUT_FLOOR, THROUGHPUT_FLOOR_NUMPY
+except ModuleNotFoundError:  # invoked as a bare script: sibling module import
+    from bench_layout import THROUGHPUT_FLOOR, THROUGHPUT_FLOOR_NUMPY
+
+FLEET_FAMILIES = ("uniform", "serpentine2", "serpentine4") + pod_layouts(
+    (1, 2, 3, 4, 8)
+)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False) -> list[dict]:
+    out = []
+    # The PR-8 fleet grid with the coding flag as one more free axis: the
+    # fused program prices bus-invert points through the lowered activity
+    # multipliers, so the axis must not cost a second program.
+    big = DesignSpace(
+        rows=(8, 16, 32, 64, 96, 128),
+        cols=(8, 16, 32, 64, 128, 192, 256, 512),
+        input_bits=(4, 8, 16),
+        dataflows=("WS", "OS"),
+        pe_area_um2=(400.0, 900.0, 1600.0, 2500.0),
+        bus_invert=(False, True),
+    )
+    grid = big.expand()
+    # Representative 3-GEMM fleet (largest-MAC ResNet-50 layers): matches the
+    # layout bench's 3-workload axis so engine and objective rates compare.
+    gemms = sorted(
+        (conv_to_gemm(c) for c in RESNET50_TABLE1), key=lambda g: -g.macs
+    )[:3]
+    rng = np.random.default_rng(0)
+    a_h = rng.uniform(0.1, 0.4, (len(gemms), grid.n_points))
+    a_v = rng.uniform(0.2, 0.6, (len(gemms), grid.n_points))
+    use_jit = _HAS_JAX
+    floor = THROUGHPUT_FLOOR if use_jit else THROUGHPUT_FLOOR_NUMPY
+
+    call = lambda: evaluate_fleet_objective(
+        grid, a_h, a_v, gemms, layouts=FLEET_FAMILIES, use_jit=use_jit
+    )
+    ev = call()  # compile + keep the result for the flip row
+    call()  # settle device caches before timing
+    t_eval = min(_timed(call) for _ in range(5))
+    n_cells = grid.n_points * len(FLEET_FAMILIES)
+    rate = n_cells / t_eval
+    assert rate >= floor, (
+        f"fused objective {rate:,.0f} cells/s below the {floor:,.0f} floor"
+    )
+    out.append(
+        {
+            "name": "objective/engine",
+            "us_per_call": t_eval * 1e6 / n_cells,
+            "cells_per_s": rate,
+            "layout": "+".join(FLEET_FAMILIES),
+            "dataflow": "WS+OS",
+            "derived": (
+                f"jit={use_jit} {rate:,.0f} (point x layout) J/op cells/s warm "
+                f"({grid.n_points} points incl. coding axis x "
+                f"{len(FLEET_FAMILIES)} families x {len(gemms)} GEMMs in "
+                f"{t_eval*1e3:.1f}ms; floor {floor:,.0f}/s)"
+            ),
+        }
+    )
+
+    # --- J/op winner vs bus-power winner -----------------------------------
+    flipped = ev.best_layout != ev.best_layout_jpo
+    flips = int(np.sum(flipped))
+    total = int(flipped.size)
+    assert flips >= 1, "J/op never disagrees with bus power — objective is inert"
+    pj = int(np.flatnonzero(flipped)[0])  # name one flip cell
+    out.append(
+        {
+            "name": "objective/winner_flips",
+            "us_per_call": 0.0,
+            "flips": flips,
+            "layout": "+".join(FLEET_FAMILIES),
+            "dataflow": "WS+OS",
+            "derived": (
+                f"{flips}/{total} design points rank a different family under "
+                f"fleet J/op than under bus power; e.g. {grid.describe(pj)}: "
+                f"{ev.layouts[int(ev.best_layout[pj])]} -> "
+                f"{ev.layouts[int(ev.best_layout_jpo[pj])]}"
+            ),
+        }
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r)

@@ -24,6 +24,7 @@ from __future__ import annotations
 import argparse
 import inspect
 import json
+import pathlib
 import sys
 import time
 import traceback
@@ -37,6 +38,7 @@ from benchmarks import (
     bench_layout,
     bench_mxu_scale,
     bench_network_profile,
+    bench_objective,
     bench_resilience,
     bench_table1_layers,
 )
@@ -48,6 +50,7 @@ MODULES = [
     ("mxu_scale", bench_mxu_scale),
     ("design_space", bench_design_space),
     ("layout", bench_layout),
+    ("objective", bench_objective),
     ("kernels", bench_kernels),
     ("activity_profile", bench_activity_profile),
     ("network_profile", bench_network_profile),
@@ -88,6 +91,9 @@ def main(argv: list[str] | None = None) -> None:
                         # evaluator (0.0 for rows that don't measure it) —
                         # the CI perf-floor job tracks this trajectory
                         "cells_per_s": float(row.get("cells_per_s", 0.0)),
+                        # J/op-vs-bus-power ranking disagreements (the
+                        # objective/winner_flips row; 0 elsewhere)
+                        "flips": int(row.get("flips", 0)),
                         # chunked-sweep accounting (chunks evaluated /
                         # resumed / quarantined, guard verdicts) — the CI
                         # sweep-resume and chaos jobs assert against these
@@ -116,6 +122,11 @@ def main(argv: list[str] | None = None) -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)
+        # Repo-root trajectory snapshot: the per-PR row dump CI uploads so
+        # throughput (cells_per_s) and flip counts diff across PRs.
+        bench_pr = pathlib.Path(__file__).resolve().parent.parent / "BENCH_9.json"
+        with open(bench_pr, "w") as f:
+            json.dump({"pr": 9, "rows": report["rows"]}, f, indent=1)
     if failed:
         sys.exit(1)
 

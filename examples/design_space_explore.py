@@ -49,6 +49,11 @@ ap.add_argument("--max-chunks", type=int, default=None, metavar="N",
                 help="stop after N fresh chunks (simulates a killed run)")
 ap.add_argument("--report", default=None, metavar="PATH",
                 help="write the sweep validation report as JSON")
+ap.add_argument("--objective", choices=("jpo",), default=None,
+                help="jpo: rank layout families on fused fleet J/op "
+                     "(utilization + spill/trunk traffic + static power) and "
+                     "list the points where the J/op winner differs from the "
+                     "bus-power winner")
 args = ap.parse_args()
 
 sweep = None
@@ -62,8 +67,10 @@ elif args.resume or args.max_chunks is not None:
     ap.error("--resume/--max-chunks require --store")
 
 
-def _write_report(report, digest=None):
+def _write_report(report, digest=None, objective_report=None):
     doc = {"digest": digest, "report": report.as_dict()}
+    if objective_report is not None:
+        doc["objective"] = objective_report.as_dict()
     if args.report:
         with open(args.report, "w") as f:
             json.dump(doc, f, indent=1)
@@ -76,6 +83,14 @@ def _digest(ev) -> str:
     h = hashlib.sha256()
     for f in _DESIGN_FIELDS:
         h.update(np.ascontiguousarray(getattr(ev, f)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _jpo_digest(jev) -> str:
+    h = hashlib.sha256()
+    for f in ("feasible", "utilization", "j_per_mac", "j_per_mac_robust",
+              "bus_power_robust", "overhead_w"):
+        h.update(np.ascontiguousarray(np.asarray(getattr(jev, f))).tobytes())
     return h.hexdigest()[:16]
 
 space = DesignSpace(
@@ -113,8 +128,11 @@ else:
     print(f"sweep: {rep.summary()}")
     if args.resume and rep.chunks_resumed == 0:
         sys.exit("--resume: no chunks were served from the store")
-    _write_report(rep, _digest(ev))
-    print(f"results digest: {_digest(ev)}")
+    if args.objective is None:
+        # with --objective the report is written at the end, with the
+        # objective digest folded in, so resume CI covers both paths
+        _write_report(rep, _digest(ev))
+        print(f"results digest: {_digest(ev)}")
 # Throughput-aware frontier: bus energy per MAC (small arrays win — narrower
 # accumulators) vs MACs/cycle (big arrays win) vs worst-case regret.
 mask = ev.pareto(("bus_energy_per_mac_j", "neg_macs_per_cycle", "max_regret"))
@@ -218,3 +236,59 @@ print(
     f"uniform rectangle (W/H* {float(lev.aspect_opt[w_i, li, p_i]):.2f} vs "
     f"{float(lev.aspect_opt[w_i, 0, p_i]):.2f})"
 )
+
+# --- fused fleet J/op: fleets of pods vs the monolithic array ---------------
+# Bus power alone says nothing about how well a GEMM fills the array.  The
+# fused objective prices total J per useful MAC — wire + clock + calibrated
+# static power divided through partition-model utilization, plus the spill
+# and trunk words the pod partitioning moves — in the same jitted program,
+# so fleets (k x k pods) and monoliths rank on delivered work.
+if args.objective == "jpo":
+    from repro.core.objective import evaluate_fleet_objective  # noqa: E402
+    from repro.core.workloads import conv_to_gemm  # noqa: E402
+    from repro.layout import pod_layouts  # noqa: E402
+
+    JPO_FAMILIES = ("uniform", "serpentine2") + pod_layouts((2, 4))
+    gemms = [conv_to_gemm(c) for c in layers]
+    jkw = {}
+    if sweep is not None:
+        from repro.core.sweep import SweepConfig  # noqa: E402
+
+        jkw["sweep"] = SweepConfig(chunk_size=args.chunk_size, store=args.store)
+    jev = evaluate_fleet_objective(
+        grid, a_h, a_v, gemms, layouts=JPO_FAMILIES, **jkw
+    )
+    print(f"\nfleet J/op: {len(gemms)} ResNet GEMMs x {grid.n_points} points "
+          f"x families ({', '.join(jev.layouts)})")
+    if sweep is not None:
+        print(f"objective sweep: {jev.sweep_report.summary()}")
+
+    jnames = np.asarray(jev.layouts)
+    bus_win = jev.best_layout
+    jpo_win = jev.best_layout_jpo
+    is_pod = np.array([n.startswith("pods") for n in jev.layouts])
+    print(f"{'family':>12} {'bus-power wins':>15} {'J/op wins':>10}")
+    for li, name in enumerate(jev.layouts):
+        print(f"{name:>12} {int((bus_win == li).sum()):15d} "
+              f"{int((jpo_win == li).sum()):10d}")
+    print(f"{'pod fleets':>12} {int(is_pod[bus_win].sum()):15d} "
+          f"{int(is_pod[jpo_win].sum()):10d}   (vs monolithic families)")
+
+    flips = np.flatnonzero(bus_win != jpo_win)
+    assert len(flips) >= 1, "J/op never disagrees with bus power"
+    jr = np.asarray(jev.j_per_mac_robust)
+    gain = jr[bus_win[flips], flips] / jr[jpo_win[flips], flips] - 1.0
+    order = flips[np.argsort(-gain)]
+    print(f"\n{len(flips)} of {grid.n_points} points flip winner once "
+          f"utilization + spill/trunk traffic are priced; largest J/op wins:")
+    print(f"{'config':>22} {'bus-power pick':>15} {'J/op pick':>10} "
+          f"{'J/op saved':>11}")
+    for p in order[:5]:
+        saved = 1.0 - jr[jpo_win[p], p] / jr[bus_win[p], p]
+        print(f"{grid.describe(int(p)):>22} {jnames[bus_win[p]]:>15} "
+              f"{jnames[jpo_win[p]]:>10} {saved*100:10.1f}%")
+
+    if sweep is not None:
+        digest = f"{_digest(ev)}+{_jpo_digest(jev)}"
+        _write_report(rep, digest, objective_report=jev.sweep_report)
+        print(f"results digest: {digest}")

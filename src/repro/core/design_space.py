@@ -63,7 +63,7 @@ from repro.core.floorplan import (
     golden_section_minimize_arr,
     optimal_aspect_power_arr,
 )
-from repro.core.optimize import _power_shape, bus_invert_activity_arr
+from repro.core.optimize import _power_shape
 
 try:  # jax accelerates the engine; the same code runs in float64 numpy without it
     import jax
@@ -292,9 +292,18 @@ class DesignGrid:
 # ---------------------------------------------------------------------------
 
 
-def _effective_a_v(bi_mask, b_v_data, a_v, xp):
-    """Bus-invert activity transform where the grid says the bus is coded."""
-    return xp.where(bi_mask, bus_invert_activity_arr(a_v, b_v_data, xp=xp), a_v)
+def _effective_a_v(grid, a_v):
+    """Host-side coded vertical activity (see ``layout.coeffs``).
+
+    Coding is lowered BEFORE the jitted program: the exact float64
+    bus-invert closed form runs once on the host (``grid_coding_effective``
+    — the same transform the layout/objective engines consume as activity
+    multipliers), so the coding flag is no longer special-cased inside the
+    evaluators.
+    """
+    from repro.layout.coeffs import grid_coding_effective
+
+    return grid_coding_effective(grid, a_v)
 
 
 def _evaluate_core(
@@ -302,11 +311,9 @@ def _evaluate_core(
     cols,
     b_h,
     b_v,
-    b_v_data,
-    bi_mask,
     pe_area,
     a_h,
-    a_v,
+    a_v_eff,  # CODED vertical activity (host-lowered, see _effective_a_v)
     weights,
     lo,
     hi,
@@ -317,12 +324,9 @@ def _evaluate_core(
     share,
     *,
     gss_iters: int,
-    apply_bi: bool = True,
 ):
     xp = _xp(rows, a_h)
-    # ``apply_bi`` is host-known (the grid is concrete numpy before tracing):
-    # a BI-free space skips the binomial transform entirely.
-    a_v_eff = _effective_a_v(bi_mask, b_v_data, a_v, xp) if apply_bi else a_v + 0.0
+    a_v_eff = a_v_eff + 0.0
 
     # Per-(workload, point) envelope-clamped Eq. 6 optimum + its numeric
     # (batched log-space golden-section) cross-check.
@@ -408,11 +412,8 @@ def _evaluate_core(
     }
 
 
-def _sweep_core(
-    rows, cols, b_h, b_v, b_v_data, bi_mask, pe_area, a_h, a_v, aspects, *, apply_bi=True
-):
+def _sweep_core(rows, cols, b_h, b_v, pe_area, a_h, a_v_eff, aspects):
     xp = _xp(rows, a_h, aspects)
-    a_v_eff = _effective_a_v(bi_mask, b_v_data, a_v, xp) if apply_bi else a_v
     return bus_power_arr(
         rows[:, None],
         cols[:, None],
@@ -427,15 +428,13 @@ def _sweep_core(
 
 
 @functools.lru_cache(maxsize=8)
-def _jitted_eval(gss_iters: int, apply_bi: bool):
-    return jax.jit(
-        functools.partial(_evaluate_core, gss_iters=gss_iters, apply_bi=apply_bi)
-    )
+def _jitted_eval(gss_iters: int):
+    return jax.jit(functools.partial(_evaluate_core, gss_iters=gss_iters))
 
 
-@functools.lru_cache(maxsize=2)
-def _jitted_sweep(apply_bi: bool):
-    return jax.jit(functools.partial(_sweep_core, apply_bi=apply_bi))
+@functools.lru_cache(maxsize=1)
+def _jitted_sweep():
+    return jax.jit(_sweep_core)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -543,22 +542,19 @@ def evaluate_design_space(
             sweep=sweep,
         )
         return DesignSpaceEval(grid=grid, sweep_report=report, **out)
-    apply_bi = bool(np.any(grid.bus_invert))
     fn = (
-        _jitted_eval(gss_iters, apply_bi)
+        _jitted_eval(gss_iters)
         if use_jit
-        else functools.partial(_evaluate_core, gss_iters=gss_iters, apply_bi=apply_bi)
+        else functools.partial(_evaluate_core, gss_iters=gss_iters)
     )
     args = (
         np.asarray(grid.rows, float),
         np.asarray(grid.cols, float),
         np.asarray(grid.b_h, float),
         np.asarray(grid.b_v, float),
-        np.asarray(grid.b_v_data, float),
-        np.asarray(grid.bus_invert, bool),
         np.asarray(grid.pe_area_um2, float),
         a_h,
-        a_v,
+        _effective_a_v(grid, a_v),
         w,
         float(grid.aspect_lo),
         float(grid.aspect_hi),
@@ -589,22 +585,15 @@ def sweep_bus_power(
     use_jit = _HAS_JAX if use_jit is None else use_jit
     if use_jit and not _HAS_JAX:
         raise RuntimeError("use_jit=True but jax is not importable")
-    apply_bi = bool(np.any(grid.bus_invert))
-    fn = (
-        _jitted_sweep(apply_bi)
-        if use_jit
-        else functools.partial(_sweep_core, apply_bi=apply_bi)
-    )
+    fn = _jitted_sweep() if use_jit else _sweep_core
     out = fn(
         np.asarray(grid.rows, float),
         np.asarray(grid.cols, float),
         np.asarray(grid.b_h, float),
         np.asarray(grid.b_v, float),
-        np.asarray(grid.b_v_data, float),
-        np.asarray(grid.bus_invert, bool),
         np.asarray(grid.pe_area_um2, float),
         a_h,
-        a_v,
+        _effective_a_v(grid, a_v),
         aspects,
     )
     return np.asarray(out)

@@ -104,7 +104,11 @@ __all__ = [
 # mis-serving them (same rule the profile store follows).  v2: the layout
 # engine moved to the coefficient-protocol evaluator (bisection+Newton
 # aspect search) — numerically tighter optima than the GSS chunks of v1.
-SWEEP_STORE_VERSION = "sweep-v2"
+# v3: bus-invert coding is lowered host-side in exact float64 (activity
+# multipliers / effective activities) instead of recomputed inside the f32
+# jitted programs, and the layout engine gained the fused J/op objective
+# fields — both change chunk bytes.
+SWEEP_STORE_VERSION = "sweep-v3"
 
 # The exact output field sets of the two engines — chunk payloads carry all
 # of them, and a stored chunk missing (or growing) a field fails decode.
@@ -134,6 +138,13 @@ _LAYOUT_FIELDS = (
     "bus_power_robust",
     "overhead_w",
     "wirelength_um",
+)
+# Objective-mode layout sweeps (an ``ObjectiveSpec`` was priced) carry the
+# fused J/op outputs on top of the wire-power schema.
+_OBJECTIVE_FIELDS = _LAYOUT_FIELDS + (
+    "utilization",
+    "j_per_mac",
+    "j_per_mac_robust",
 )
 
 # Chunks are pure compute (no device queue contention like profiling), so
@@ -389,22 +400,20 @@ def _chunk_points(index: int, chunk_size: int, n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _design_eval_factory(grid, a_h, a_v, w, cfg, gss_iters, apply_bi, cs, n):
+def _design_eval_factory(grid, a_h, a_v_eff, w, cfg, gss_iters, cs, n):
     from repro.core.design_space import _evaluate_core, _jitted_eval
 
     rows = np.asarray(grid.rows, float)
     cols = np.asarray(grid.cols, float)
     b_h = np.asarray(grid.b_h, float)
     b_v = np.asarray(grid.b_v, float)
-    b_v_data = np.asarray(grid.b_v_data, float)
-    bi = np.asarray(grid.bus_invert, bool)
     area = np.asarray(grid.pe_area_um2, float)
     lo, hi = float(grid.aspect_lo), float(grid.aspect_hi)
 
     def args_for(idx):
         return (
-            rows[idx], cols[idx], b_h[idx], b_v[idx], b_v_data[idx],
-            bi[idx], area[idx], a_h[:, idx], a_v[:, idx], w, lo, hi,
+            rows[idx], cols[idx], b_h[idx], b_v[idx], area[idx],
+            a_h[:, idx], a_v_eff[:, idx], w, lo, hi,
             cfg.vdd, cfg.freq_hz, cfg.wire_cap_f_per_um,
             cfg.non_bus_interconnect_fraction, cfg.interconnect_share_of_total,
         )
@@ -414,7 +423,7 @@ def _design_eval_factory(grid, a_h, a_v, w, cfg, gss_iters, apply_bi, cs, n):
         if rung == "jit":
             import jax
 
-            fn = _jitted_eval(gss_iters, apply_bi)
+            fn = _jitted_eval(gss_iters)
             ctx = (
                 jax.default_device(device)
                 if device is not None
@@ -426,15 +435,13 @@ def _design_eval_factory(grid, a_h, a_v, w, cfg, gss_iters, apply_bi, cs, n):
             return {
                 k: np.asarray(v)
                 for k, v in _evaluate_core(
-                    *args_for(idx), gss_iters=gss_iters, apply_bi=apply_bi
+                    *args_for(idx), gss_iters=gss_iters
                 ).items()
             }
         # scalar rung: one point per call — nothing batched that could smear
         # one bad cell into its neighbors.
         parts = [
-            _evaluate_core(
-                *args_for(idx[j : j + 1]), gss_iters=gss_iters, apply_bi=apply_bi
-            )
+            _evaluate_core(*args_for(idx[j : j + 1]), gss_iters=gss_iters)
             for j in range(len(idx))
         ]
         return {
@@ -597,14 +604,34 @@ def _design_validate_factory(
 # ---------------------------------------------------------------------------
 
 
+def _slice_objective(objective, sub_idx):
+    """Per-chunk view of an ``ObjectiveSpec``: the lowered partition arrays
+    and static power sliced along the point axis (all shapes end in P)."""
+    from repro.layout.coeffs import LoweredTensors
+    from repro.layout.power import ObjectiveSpec
+
+    host = {
+        k: np.ascontiguousarray(v[..., sub_idx])
+        for k, v in objective.partition.host.items()
+    }
+    return ObjectiveSpec(
+        partition=LoweredTensors(None, host),
+        static_w=np.ascontiguousarray(
+            np.asarray(objective.static_w, float)[:, sub_idx]
+        ),
+    )
+
+
 def _layout_eval_factory(
-    grid, a_h, a_v, layouts, h_lanes, v_lanes, w, cfg, gss_iters, cs, n
+    grid, a_h, a_v, layouts, h_lanes, v_lanes, w, cfg, gss_iters, cs, n,
+    objective=None,
 ):
     # Per-SWEEP device residency (populated lazily on the first jit chunk):
     # the full grid's coefficient tensors and activities are device-put
     # exactly once, and every chunk slices them on-device.  The per-chunk
     # host->device transfer of v1 was pure overhead at large P.
     state: dict = {}
+    fields = _OBJECTIVE_FIELDS if objective is not None else _LAYOUT_FIELDS
 
     def run(sub_idx, use_jit):
         from repro.layout.power import evaluate_layout_space
@@ -620,14 +647,21 @@ def _layout_eval_factory(
             cfg=cfg,
             use_jit=use_jit,
             gss_iters=gss_iters,
+            objective=(
+                None if objective is None else _slice_objective(objective, sub_idx)
+            ),
         )
-        return {f: np.asarray(getattr(ev, f)) for f in _LAYOUT_FIELDS}
+        return {f: np.asarray(getattr(ev, f)) for f in fields}
 
     def run_jit(idx, device):
         import jax
         import jax.numpy as jnp
 
-        from repro.layout.coeffs import DEVICE_FIELDS, lower_layout_coeffs
+        from repro.layout.coeffs import (
+            DEVICE_FIELDS,
+            lower_coding_multipliers,
+            lower_layout_coeffs,
+        )
         from repro.layout.power import _jitted_coeff_eval, _search_iters
 
         if not state:
@@ -644,6 +678,22 @@ def _layout_eval_factory(
             state["h_lanes"] = None if h_lanes is None else jax.device_put(h_lanes)
             state["v_lanes"] = None if v_lanes is None else jax.device_put(v_lanes)
             state["w"] = jax.device_put(w)
+            state["act_mult"] = (
+                lower_coding_multipliers(grid, a_v).device()["act_mult"]
+                if bool(np.any(np.asarray(grid.bus_invert)))
+                else None
+            )
+            if objective is not None:
+                dv = objective.partition.device()
+                rows_f = np.asarray(grid.rows, float)
+                state["util"] = dv["utilization"]
+                state["spill"] = dv["spill_words_per_mac"]
+                state["trunk"] = dv["trunk_words_per_mac"]
+                state["rows"] = jax.device_put(rows_f)
+                state["rc"] = jax.device_put(rows_f * np.asarray(grid.cols, float))
+                state["static"] = jax.device_put(
+                    np.asarray(objective.static_w, float)
+                )
         coeffs = state["coeffs"]
         nb, nn = _search_iters(gss_iters)
         ctx = (
@@ -669,6 +719,22 @@ def _layout_eval_factory(
                 if state["v_lanes"] is None
                 else jnp.take(state["v_lanes"], ji, axis=1)
             )
+            am = (
+                None
+                if state["act_mult"] is None
+                else jnp.take(state["act_mult"], ji, axis=-1)
+            )
+            if objective is not None:
+                obj_args = (
+                    jnp.take(state["util"], ji, axis=-1),
+                    jnp.take(state["spill"], ji, axis=-1),
+                    jnp.take(state["trunk"], ji, axis=-1),
+                    jnp.take(state["rows"], ji, axis=-1),
+                    jnp.take(state["rc"], ji, axis=-1),
+                    jnp.take(state["static"], ji, axis=-1),
+                )
+            else:
+                obj_args = (None,) * 6
             # Donation is only honored (and only matters) off-CPU; the CPU
             # backend warns and keeps the buffers, so skip it there.
             donate = jax.default_backend() != "cpu"
@@ -688,6 +754,8 @@ def _layout_eval_factory(
                 cfg.preload_duty * cfg.preload_activity,
                 cfg.drain_duty * cfg.drain_activity,
                 cfg.clock_toggles_per_cycle,
+                am,
+                *obj_args,
             )
         out = {k: np.asarray(v, float) for k, v in out.items()}
         feasible = coeffs.host["feasible"][:, idx]
@@ -695,6 +763,15 @@ def _layout_eval_factory(
         for key in ("bus_power_robust", "overhead_w", "wirelength_um"):
             out[key] = np.where(bad, np.inf, out[key])
         out["bus_power_opt"] = np.where(bad[None], np.inf, out["bus_power_opt"])
+        if objective is not None:
+            out["j_per_mac"] = np.where(bad[None], np.inf, out["j_per_mac"])
+            out["j_per_mac_robust"] = np.where(
+                bad, np.inf, out["j_per_mac_robust"]
+            )
+            # Pure pass-through input, attached host-side (never leaves f64).
+            out["utilization"] = np.ascontiguousarray(
+                objective.partition.host["utilization"][..., idx]
+            )
         out["feasible"] = feasible
         out["aspect_lo"] = coeffs.host["lo"][:, idx]
         out["aspect_hi"] = coeffs.host["hi"][:, idx]
@@ -708,7 +785,7 @@ def _layout_eval_factory(
             return run(idx, False)
         parts = [run(idx[j : j + 1], False) for j in range(len(idx))]
         return {
-            f: np.concatenate([p[f] for p in parts], axis=-1) for f in _LAYOUT_FIELDS
+            f: np.concatenate([p[f] for p in parts], axis=-1) for f in fields
         }
 
     return eval_chunk
@@ -716,8 +793,10 @@ def _layout_eval_factory(
 
 def _layout_validate_factory(
     grid, a_h, a_v, layouts, h_lanes, v_lanes, w, cfg, spec, oracle_cells,
-    oracle_seed, cs, n,
+    oracle_seed, cs, n, objective=None,
 ):
+    fields = _OBJECTIVE_FIELDS if objective is not None else _LAYOUT_FIELDS
+
     def validate(out, index, rung):
         idx = _chunk_idx(index, cs, n)
         loose = rung in ("jit", "stored")
@@ -725,7 +804,7 @@ def _layout_validate_factory(
         tiny = 1e-30
         v: list[str] = []
 
-        missing = [f for f in _LAYOUT_FIELDS if f not in out]
+        missing = [f for f in fields if f not in out]
         if missing:
             return [f"missing fields {missing}"]
         feas = np.asarray(out["feasible"], bool)
@@ -777,11 +856,56 @@ def _layout_validate_factory(
         if (wl[feas] <= 0).any():
             v.append("non-positive wirelength on feasible cells")
 
+        # J/op contracts (objective mode): utilization is a pure pass-through
+        # of the lowered partition arrays (bit-exact), and j_per_mac must be
+        # finite and positive exactly on live cells — a NaN anywhere in the
+        # objective fields is a poisoned/miscomputed chunk.
+        if objective is not None:
+            util = np.asarray(out["utilization"], float)
+            jpm = np.asarray(out["j_per_mac"], float)
+            jpr = np.asarray(out["j_per_mac_robust"], float)
+            if np.isnan(util).any():
+                v.append("NaN values in utilization")
+            elif (util < -tiny).any() or (util > 1.0 + 1e-6).any():
+                v.append("utilization outside [0, 1]")
+            elif not np.array_equal(
+                util, objective.partition.host["utilization"][..., idx]
+            ):
+                v.append(
+                    "utilization differs from the lowered partition arrays"
+                )
+            if np.isnan(jpm).any():
+                v.append("NaN values in j_per_mac")
+            else:
+                dead = (~feas[None]) | (util <= 0.0)
+                if dead.any() and not np.isinf(jpm[dead]).all():
+                    v.append("j_per_mac finite on infeasible/zero-MAC cells")
+                live = ~dead
+                if live.any():
+                    if not np.isfinite(jpm[live]).all():
+                        v.append("j_per_mac non-finite on live cells")
+                    elif (jpm[live] <= 0).any():
+                        v.append("non-positive j_per_mac on live cells")
+            if np.isnan(jpr).any():
+                v.append("NaN values in j_per_mac_robust")
+            else:
+                if infeas.any() and not np.isinf(jpr[infeas]).all():
+                    v.append("j_per_mac_robust finite on infeasible cells")
+                if feas.any():
+                    if not np.isfinite(jpr[feas]).all():
+                        v.append("j_per_mac_robust non-finite on feasible cells")
+                    elif (jpr[feas] < -tiny).any():
+                        v.append("negative j_per_mac_robust")
+
         # Cross-engine: seeded feasible cells re-priced through the explicit
         # per-segment enumeration (``segment_bus_power``) — the segment
-        # engine's own scalar oracle.
+        # engine's own scalar oracle.  On bus-invert points the engine's
+        # coding multipliers scale every v-class activity by coded/raw, which
+        # is exactly pricing the segments at the coded activity — so the
+        # oracle codes its scalar a_v through the same closed form.
         if oracle_cells > 0:
             from repro.core.floorplan import BusActivity
+            from repro.core.optimize import bus_invert_activity
             from repro.layout.geometry import get_layout
             from repro.layout.power import segment_bus_power
 
@@ -789,6 +913,8 @@ def _layout_validate_factory(
             cells = np.argwhere(feas)
             if len(cells):
                 n_w = a_h.shape[0]
+                bi = np.asarray(grid.bus_invert, bool)
+                b_v_data = np.asarray(grid.b_v_data, np.int64)
                 for t in range(oracle_cells):
                     h = hashlib.sha256(
                         spec + f"|loracle|{oracle_seed}|{index}|{t}".encode()
@@ -797,10 +923,13 @@ def _layout_validate_factory(
                     wi = int.from_bytes(h[4:8], "big") % n_w
                     li, j, pj = int(li), int(j), int(idx[int(j)])
                     asp = float(ao[wi, li, j])
+                    av_s = float(a_v[wi, pj])
+                    if bi[pj]:
+                        av_s = bus_invert_activity(av_s, int(b_v_data[pj]))
                     ref = segment_bus_power(
                         get_layout(layouts[li]),
                         grid.geometry(pj),
-                        BusActivity(float(a_h[wi, pj]), float(a_v[wi, pj])),
+                        BusActivity(float(a_h[wi, pj]), av_s),
                         asp,
                         dataflow="OS" if grid.dataflow_os[pj] else "WS",
                         h_lanes=None if h_lanes is None else h_lanes[wi, pj],
@@ -1225,9 +1354,12 @@ def run_design_sweep(grid, a_h, a_v, weights, *, cfg, gss_iters, use_jit, sweep)
     if n == 0:
         raise ContractViolationError("cannot sweep an empty design grid")
     start_rung = "jit" if use_jit else "eager"
-    # apply_bi comes from the FULL grid — a per-chunk recomputation would
-    # recompile per chunk and change semantics between chunks.
-    apply_bi = bool(np.any(grid.bus_invert))
+    # Coding lowered ONCE over the full grid (exact host float64) — chunks
+    # slice the effective activities, so the coding flag never reaches the
+    # jitted program and cannot change semantics between chunks.
+    from repro.core.design_space import _effective_a_v
+
+    a_v_eff = _effective_a_v(grid, a_v)
     cs = int(sweep.chunk_size)
     spec = _spec_key(
         "design",
@@ -1240,7 +1372,6 @@ def run_design_sweep(grid, a_h, a_v, weights, *, cfg, gss_iters, use_jit, sweep)
             ("gss_iters", int(gss_iters)),
             ("chunk_size", cs),
             ("start_rung", start_rung),
-            ("apply_bi", apply_bi),
         ],
     )
     return _run_chunked(
@@ -1250,7 +1381,7 @@ def run_design_sweep(grid, a_h, a_v, weights, *, cfg, gss_iters, use_jit, sweep)
         start_rung=start_rung,
         spec=spec,
         eval_chunk=_design_eval_factory(
-            grid, a_h, a_v, weights, cfg, gss_iters, apply_bi, cs, n
+            grid, a_h, a_v_eff, weights, cfg, gss_iters, cs, n
         ),
         validate_chunk=_design_validate_factory(
             grid, a_h, a_v, weights, cfg, spec, int(sweep.oracle_cells),
@@ -1273,11 +1404,17 @@ def run_layout_sweep(
     gss_iters,
     use_jit,
     sweep,
+    objective=None,
 ):
     """Chunked, validated, resumable ``evaluate_layout_space`` execution.
 
     Returns ``(fields, SweepReport)`` with the ``LayoutSpaceEval`` arrays
-    (including ``feasible`` and the per-cell aspect window).
+    (including ``feasible`` and the per-cell aspect window).  With an
+    ``ObjectiveSpec`` (``objective=``), chunks carry the fused J/op fields
+    too, keyed as a distinct ``"objective"`` sweep kind — the spec digest
+    additionally covers the lowered partition arrays (their content key)
+    and the calibrated static power, so J/op chunks never alias wire-power
+    chunks over the same grid.
     """
     n = grid.n_points
     if n == 0:
@@ -1285,40 +1422,52 @@ def run_layout_sweep(
     start_rung = "jit" if use_jit else "eager"
     cs = int(sweep.chunk_size)
     layouts = tuple(layouts)
-    spec = _spec_key(
-        "layout",
-        grid,
-        a_h,
-        a_v,
-        weights,
-        extra=[
-            ("layouts", ",".join(layouts)),
-            (
-                "h_lanes",
-                b"none" if h_lanes is None else np.asarray(h_lanes, np.float64).tobytes(),
-            ),
-            (
-                "v_lanes",
-                b"none" if v_lanes is None else np.asarray(v_lanes, np.float64).tobytes(),
-            ),
-            ("cfg", repr(dataclasses.astuple(cfg))),
-            ("gss_iters", int(gss_iters)),
-            ("chunk_size", cs),
-            ("start_rung", start_rung),
-        ],
-    )
+    kind = "layout" if objective is None else "objective"
+    fields = _LAYOUT_FIELDS if objective is None else _OBJECTIVE_FIELDS
+    extra = [
+        ("layouts", ",".join(layouts)),
+        (
+            "h_lanes",
+            b"none" if h_lanes is None else np.asarray(h_lanes, np.float64).tobytes(),
+        ),
+        (
+            "v_lanes",
+            b"none" if v_lanes is None else np.asarray(v_lanes, np.float64).tobytes(),
+        ),
+        ("cfg", repr(dataclasses.astuple(cfg))),
+        ("gss_iters", int(gss_iters)),
+        ("chunk_size", cs),
+        ("start_rung", start_rung),
+    ]
+    if objective is not None:
+        part = objective.partition
+        part_key = part.key
+        if part_key is None:  # a sliced/ad-hoc entry: key over content
+            part_key = hashlib.sha256(
+                b"".join(
+                    np.ascontiguousarray(part.host[k]).tobytes()
+                    for k in sorted(part.host)
+                )
+            ).hexdigest()
+        extra += [
+            ("partition", str(part_key)),
+            ("static_w", np.asarray(objective.static_w, np.float64).tobytes()),
+        ]
+    spec = _spec_key(kind, grid, a_h, a_v, weights, extra=extra)
     return _run_chunked(
-        "layout",
+        kind,
         n,
         sweep,
         start_rung=start_rung,
         spec=spec,
         eval_chunk=_layout_eval_factory(
-            grid, a_h, a_v, layouts, h_lanes, v_lanes, weights, cfg, gss_iters, cs, n
+            grid, a_h, a_v, layouts, h_lanes, v_lanes, weights, cfg, gss_iters,
+            cs, n, objective=objective,
         ),
         validate_chunk=_layout_validate_factory(
             grid, a_h, a_v, layouts, h_lanes, v_lanes, weights, cfg, spec,
             int(sweep.oracle_cells), int(sweep.seed), cs, n,
+            objective=objective,
         ),
-        fields=_LAYOUT_FIELDS,
+        fields=fields,
     )

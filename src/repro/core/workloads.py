@@ -619,21 +619,28 @@ def partition_gemm(
 def design_pod_partition(grid, layouts, gemms: Sequence[Gemm], weights=None):
     """(L, P) partition statistics of a workload over a layout-axis grid.
 
-    For every (layout family, design point) cell, maps each GEMM with
-    ``partition_gemm`` (k from the family: ``MultiPodLayout.k``, else 1)
-    and aggregates across GEMMs with ``weights`` (default: MAC-weighted).
-    Returns dict of (L, P) arrays:
+    For every (layout family, design point) cell, maps each GEMM (k from
+    the family: ``MultiPodLayout.k``, else 1) and aggregates across GEMMs
+    with ``weights`` (default: MAC-weighted).  Returns dict of (L, P)
+    arrays:
 
       ``utilization``        weighted mean useful-MAC fraction,
       ``ksplit_frac``        weighted fraction of GEMMs choosing K-split,
       ``trunk_words_per_mac``/``spill_words_per_mac``  traffic intensities.
 
     Cells where the family does not tile the grid get utilization 0 (the
-    layout evaluator already prices them infeasible); divide
-    ``bus_energy_per_mac_j`` by ``utilization`` to turn per-cycle power
-    into energy per USEFUL MAC.
+    layout evaluator already prices them infeasible); zero-MAC GEMMs
+    contribute zero everywhere instead of dividing by zero.
+
+    This is a thin aggregation over ``repro.layout.coeffs
+    .lower_partition_coeffs`` — the same lowered arrays the fused J/op
+    objective consumes — so the two paths cannot silently disagree.  Do
+    NOT hand-combine these statistics with ``bus_energy_per_mac_j``:
+    ``repro.core.objective.evaluate_fleet_objective`` prices total energy
+    per useful MAC (bus + clock + overhead + compute, spill and trunk
+    traffic included) in one jitted program.
     """
-    from repro.layout.geometry import MultiPodLayout, get_layout, layout_feasible
+    from repro.layout.coeffs import lower_partition_coeffs
 
     gemms = list(gemms)
     if not gemms:
@@ -645,33 +652,13 @@ def design_pod_partition(grid, layouts, gemms: Sequence[Gemm], weights=None):
         raise ValueError("weights must be positive per-GEMM values")
     w = w / w.sum()
 
-    rows = np.asarray(grid.rows, np.int64)
-    cols = np.asarray(grid.cols, np.int64)
-    os_mask = np.asarray(grid.dataflow_os, bool)
-    names = tuple(layouts)
-    shape = (len(names), grid.n_points)
-    util = np.zeros(shape)
-    ksf = np.zeros(shape)
-    trunk = np.zeros(shape)
-    spill = np.zeros(shape)
-    for li, name in enumerate(names):
-        layout = get_layout(name)
-        k = layout.k if isinstance(layout, MultiPodLayout) else 1
-        feas = np.asarray(layout_feasible(layout, rows, cols), bool)
-        feas = np.broadcast_to(feas, rows.shape)
-        r_ok = np.where(feas, rows, k)  # placeholder rows on infeasible cells
-        c_ok = np.where(feas, cols, k)
-        for g, wt in zip(gemms, w):
-            out = _partition_core(g.m, g.k, g.n, r_ok, c_ok, k, os_mask)
-            util[li] += wt * np.where(feas, out["utilization"], 0.0)
-            ksf[li] += wt * np.where(feas, out["ksplit"], 0.0)
-            trunk[li] += wt * np.where(feas, out["trunk_words"] / g.macs, 0.0)
-            spill[li] += wt * np.where(feas, out["spill_words"] / g.macs, 0.0)
+    h = lower_partition_coeffs(grid, layouts, gemms).host
+    w3 = w[:, None, None]
     return {
-        "utilization": util,
-        "ksplit_frac": ksf,
-        "trunk_words_per_mac": trunk,
-        "spill_words_per_mac": spill,
+        "utilization": (w3 * h["utilization"]).sum(axis=0),
+        "ksplit_frac": (w3 * h["ksplit"]).sum(axis=0),
+        "trunk_words_per_mac": (w3 * h["trunk_words_per_mac"]).sum(axis=0),
+        "spill_words_per_mac": (w3 * h["spill_words_per_mac"]).sum(axis=0),
     }
 
 

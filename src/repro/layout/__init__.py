@@ -43,15 +43,21 @@ from repro.layout.segments import (  # noqa: F401
     segment_class_coeffs,
 )
 from repro.layout.coeffs import (  # noqa: F401
+    CODING_SCHEMES,
     LoweredCoeffs,
+    LoweredTensors,
     clear_coeff_cache,
     coeff_cache_info,
+    grid_coding_effective,
+    lower_coding_multipliers,
     lower_layout_coeffs,
+    lower_partition_coeffs,
     set_coeff_cache_capacity,
 )
 from repro.layout.power import (  # noqa: F401
     LayoutPowerConfig,
     LayoutSpaceEval,
+    ObjectiveSpec,
     evaluate_layout_space,
     rollup_segments,
     segment_bus_power,

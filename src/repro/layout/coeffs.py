@@ -40,17 +40,25 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.core.optimize import bus_invert_activity_arr
 from repro.layout.geometry import envelope_coeffs, get_layout
 from repro.layout.segments import DATA_NETS, SEGMENT_CLASS_SCHEMA, segment_class_coeffs
 
 __all__ = [
     "LoweredCoeffs",
+    "LoweredTensors",
     "lower_layout_coeffs",
+    "lower_partition_coeffs",
+    "lower_coding_multipliers",
+    "grid_coding_effective",
     "coeff_cache_info",
     "clear_coeff_cache",
     "set_coeff_cache_capacity",
+    "CODING_SCHEMES",
     "DATA_CLASS_IDX",
     "OVERHEAD_CLASS_IDX",
+    "V_HOP_DATA_IDX",
+    "V_CROSS_DATA_IDX",
 ]
 
 # Schema split: data classes drive the aspect search, overhead classes are
@@ -75,6 +83,12 @@ OVER_IS_DRAIN = np.asarray(
 OVER_IS_CLK = np.asarray(
     [1.0 if SEGMENT_CLASS_SCHEMA[i][0] == "clk" else 0.0 for i in OVERHEAD_CLASS_IDX]
 )
+# Positions of the two classes the J/op objective prices word traffic on,
+# within the DATA block: spill words re-enter through vertical hops, K-split
+# partials cross the gutter trunks.
+_DATA_CLASSES = tuple(SEGMENT_CLASS_SCHEMA[i] for i in DATA_CLASS_IDX)
+V_HOP_DATA_IDX = _DATA_CLASSES.index(("v", "hop"))
+V_CROSS_DATA_IDX = _DATA_CLASSES.index(("v", "cross"))
 
 _COEFF_CACHE: OrderedDict[str, "LoweredCoeffs"] = OrderedDict()
 _COEFF_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
@@ -296,3 +310,226 @@ def lower_layout_coeffs(
     _COEFF_CACHE[key] = entry
     _evict_to_capacity()
     return entry
+
+
+class LoweredTensors:
+    """A memoized bundle of host tensors with a lazy device-resident copy.
+
+    Shared by the partition and coding lowerings (``LoweredCoeffs`` keeps
+    its own class because its device set is the fixed ``DEVICE_FIELDS``
+    contract; here every host array is device-mirrored).
+    """
+
+    __slots__ = ("key", "host", "_device")
+
+    def __init__(self, key, host):
+        self.key = key
+        self.host = host
+        self._device = None
+
+    def device(self) -> dict:
+        if self._device is None:
+            import jax
+
+            self._device = {k: jax.device_put(v) for k, v in self.host.items()}
+        return self._device
+
+
+def _cache_get(key):
+    hit = _COEFF_CACHE.get(key)
+    if hit is not None:
+        _COEFF_CACHE.move_to_end(key)
+        _COEFF_CACHE_STATS["hits"] += 1
+    return hit
+
+
+def _cache_put(key, entry):
+    _COEFF_CACHE_STATS["misses"] += 1
+    _COEFF_CACHE[key] = entry
+    _evict_to_capacity()
+    return entry
+
+
+def _partition_key(grid, layout_names, gemms) -> str:
+    h = hashlib.sha256()
+    h.update(b"partition|")
+    for name in layout_names:
+        h.update(f"{name}={get_layout(name)!r};".encode())
+    for g in gemms:
+        h.update(f"({int(g.m)},{int(g.k)},{int(g.n)})".encode())
+    for tag, arr, dt in (
+        ("rows", grid.rows, np.int64),
+        ("cols", grid.cols, np.int64),
+        ("os", grid.dataflow_os, np.uint8),
+    ):
+        h.update(tag.encode())
+        h.update(np.ascontiguousarray(np.asarray(arr, dt)).tobytes())
+    return h.hexdigest()
+
+
+def lower_partition_coeffs(grid, layouts, gemms) -> LoweredTensors:
+    """Lower the pod-partition model into (gemm, layout, point) arrays.
+
+    One broadcast ``_partition_core`` call replaces the host Python loop of
+    ``design_pod_partition``: for every (GEMM, layout family, grid point)
+    cell the entry holds
+
+      * ``utilization``        — useful MACs / (rows*cols*cycles), 0 where
+        the mapping is degenerate (zero-MAC GEMM) or the family infeasible;
+      * ``spill_words_per_mac`` — off-array partial-sum round-trip words;
+      * ``trunk_words_per_mac`` — reduction-trunk gutter crossings;
+      * ``ksplit``             — 1.0 where the K-split mapping won.
+
+    ``partition_gemm`` remains the scalar oracle (same contract as
+    ``SegmentList`` vs. the class coefficients).  Memoized under the
+    content-keyed coeff cache; ``.device()`` gives warm jitted objective
+    calls transfer-free device buffers.
+    """
+    from repro.core.workloads import _partition_core
+    from repro.layout.geometry import MultiPodLayout, layout_feasible
+
+    layout_names = tuple(layouts)
+    gemms = tuple(gemms)
+    key = _partition_key(grid, layout_names, gemms)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+
+    p = grid.n_points
+    n_l = len(layout_names)
+    n_g = len(gemms)
+    rows = np.asarray(grid.rows, np.int64)
+    cols = np.asarray(grid.cols, np.int64)
+    os_mask = np.asarray(grid.dataflow_os, bool)
+
+    # (L, P) pod counts and feasibility; infeasible cells run with k-sized
+    # placeholder dims so the integer math stays valid, then get zeroed.
+    k_arr = np.ones((n_l, 1), np.int64)
+    feas = np.zeros((n_l, p), bool)
+    for li, name in enumerate(layout_names):
+        layout = get_layout(name)
+        k_arr[li, 0] = layout.k if isinstance(layout, MultiPodLayout) else 1
+        feas[li] = layout_feasible(layout, rows, cols)
+    r_ok = np.where(feas, rows[None, :], k_arr)
+    c_ok = np.where(feas, cols[None, :], k_arr)
+
+    m = np.asarray([g.m for g in gemms], np.int64).reshape(n_g, 1, 1)
+    kdim = np.asarray([g.k for g in gemms], np.int64).reshape(n_g, 1, 1)
+    n = np.asarray([g.n for g in gemms], np.int64).reshape(n_g, 1, 1)
+    out = _partition_core(
+        m, kdim, n, r_ok[None], c_ok[None], k_arr[None], os_mask[None, None, :]
+    )
+
+    macs = (m * kdim * n).astype(np.float64)  # (G, 1, 1)
+    live = feas[None] & (macs > 0)
+    safe = np.maximum(macs, 1.0)
+
+    def per_mac(words):
+        return np.where(live, np.asarray(words, np.float64) / safe, 0.0)
+
+    host = {
+        "utilization": np.where(live, out["utilization"], 0.0),
+        "spill_words_per_mac": per_mac(out["spill_words"]),
+        "trunk_words_per_mac": per_mac(out["trunk_words"]),
+        "ksplit": np.where(live, np.asarray(out["ksplit"], np.float64), 0.0),
+    }
+    host = {k: np.ascontiguousarray(v) for k, v in host.items()}
+    return _cache_put(key, LoweredTensors(key, host))
+
+
+# --- Coding schemes: per-class activity multipliers -------------------------
+#
+# A coding scheme lowers to a multiplicative factor on the vertical data
+# classes' switching activity (the coded bus carries one extra invert line,
+# which the grid already folds into b_v).  "none" is the identity;
+# "bus_invert" is the exact closed form; "zvcg" is a registered slot for the
+# zero-value-clock-gating follow-up (ROADMAP) — it needs measured zero-run
+# statistics the profile does not yet carry, so it raises until then.
+
+
+def _coding_none(a, bits, xp=np):
+    return a
+
+
+def _coding_bus_invert(a, bits, xp=np):
+    return bus_invert_activity_arr(a, bits, xp=xp)
+
+
+def _coding_zvcg(a, bits, xp=np):
+    raise NotImplementedError(
+        "zero-value clock gating needs measured zero-run statistics; "
+        "see ROADMAP 'Low-power signaling stack'"
+    )
+
+
+CODING_SCHEMES = {
+    "none": _coding_none,
+    "bus_invert": _coding_bus_invert,
+    "zvcg": _coding_zvcg,
+}
+
+
+def grid_coding_effective(grid, a_v, xp=np):
+    """Effective (coded) vertical activity per (workload, point), host f64.
+
+    Bus-invert points get the exact closed-form coded activity on the
+    physical ``b_v_data``-bit payload; everything else passes through.
+    This is the single host-side transform both the closed-form design
+    engine and the layout/objective engines consume — coding is no longer
+    re-derived inside each jitted program.
+    """
+    a_v = np.asarray(a_v, np.float64)
+    bi = np.asarray(grid.bus_invert, bool)
+    if not bi.any():
+        return a_v + 0.0
+    # The closed-form coded activity iterates a fixed point per element —
+    # the single most expensive host transform on a warm fleet evaluation —
+    # so it is memoized under the same content-keyed cache as the lowerings.
+    key = "coded|" + _coding_key(grid, a_v)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit.host["a_v_eff"]
+    bits = np.asarray(grid.b_v_data, np.float64)
+    coded = bus_invert_activity_arr(a_v, bits, xp=np)
+    out = np.where(bi, coded, a_v)
+    out.flags.writeable = False  # cached: callers copy before mutating
+    _cache_put(key, LoweredTensors(key, {"a_v_eff": out}))
+    return out
+
+
+def _coding_key(grid, a_v) -> str:
+    h = hashlib.sha256()
+    h.update(b"coding|")
+    for tag, arr, dt in (
+        ("bi", grid.bus_invert, np.uint8),
+        ("bits", grid.b_v_data, np.int64),
+    ):
+        h.update(tag.encode())
+        h.update(np.ascontiguousarray(np.asarray(arr, dt)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(a_v, np.float64)).tobytes())
+    return h.hexdigest()
+
+
+def lower_coding_multipliers(grid, a_v) -> LoweredTensors:
+    """Lower the grid's coding axis to (workload, data-class, point) factors.
+
+    The jitted evaluator multiplies the folded per-class activities by
+    ``act_mult`` before collapsing to the closed-form scalars: h-net classes
+    are untouched, every v-net class (hop, gutter trunk, OS drain column)
+    carries the coded/raw activity ratio where the point's bus-invert flag
+    is set.  Exactly 1.0 where coding is off or the activity is zero, so a
+    coding-free grid lowers to all-ones.  Memoized like the layout coeffs.
+    """
+    a_v = np.atleast_2d(np.asarray(a_v, np.float64))
+    key = _coding_key(grid, a_v)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+
+    n_w, p = a_v.shape
+    coded = grid_coding_effective(grid, a_v)
+    ratio = np.where(a_v > 0.0, coded / np.maximum(a_v, 1e-300), 1.0)
+    mult = np.ones((n_w, len(DATA_CLASS_IDX), p))
+    mult[:, DATA_IS_H == 0.0, :] = ratio[:, None, :]
+    host = {"act_mult": np.ascontiguousarray(mult)}
+    return _cache_put(key, LoweredTensors(key, host))

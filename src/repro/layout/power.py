@@ -67,6 +67,9 @@ from repro.layout.coeffs import (
     OVER_IS_CLK,
     OVER_IS_DRAIN,
     OVER_IS_PRELOAD,
+    V_CROSS_DATA_IDX,
+    V_HOP_DATA_IDX,
+    lower_coding_multipliers,
     lower_layout_coeffs,
 )
 from repro.layout.segments import DATA_NETS, SegmentList, enumerate_segments
@@ -81,6 +84,7 @@ except ImportError:  # pragma: no cover - jax baked into the image
 __all__ = [
     "LayoutPowerConfig",
     "LayoutSpaceEval",
+    "ObjectiveSpec",
     "rollup_segments",
     "segment_bus_power",
     "segment_wirelength",
@@ -359,6 +363,16 @@ def _coeff_eval_core(
     preload_coef,  # preload_duty * preload_activity
     drain_coef,
     clk_coef,
+    # Coding axis: (W, Cd, P) per-class activity multipliers, or None for
+    # the identity (coding-free grids skip the multiply entirely).
+    act_mult=None,
+    # J/op objective inputs (all None => wire-power-only evaluation):
+    util=None,  # (W, L, P) useful-MAC fraction from the partition lowering
+    spill_wpm=None,  # (W, L, P) off-array spill words per MAC
+    trunk_wpm=None,  # (W, L, P) reduction-trunk gutter crossings per MAC
+    rows_arr=None,  # (P,) array rows (spill words traverse 2*rows hops)
+    rc_arr=None,  # (P,) rows * cols
+    static_w=None,  # (W, P) calibrated fixed-interconnect + compute watts
     *,
     rep_idx: tuple,
     nb: int,
@@ -368,6 +382,8 @@ def _coeff_eval_core(
     pref = 0.5 * wire_cap * vdd * vdd * freq_hz
 
     act = _fold_data_activities(xp, a_h, a_v, h_lanes, v_lanes, width_d, lane0_d)
+    if act_mult is not None:
+        act = act * act_mult[:, None, :, :]
     wcol = weights[:, None, None]
 
     def stack(arr):  # (W, L, P) -> (W+1, L, P): per-workload slots + weighted
@@ -444,7 +460,7 @@ def _coeff_eval_core(
     ln_d = alpha_d * tr + beta_d / tr + gamma_d
     wirelength = xp.sum(cwidth_d * ln_d, axis=1)
 
-    return {
+    out = {
         "aspect_opt": aspect[:-1],
         "bus_power_opt": pref * f[:-1],
         "aspect_robust": aspect[-1],
@@ -452,6 +468,49 @@ def _coeff_eval_core(
         "overhead_w": overhead_w,
         "wirelength_um": wirelength,
     }
+
+    if util is not None:
+        # Fused J/op objective — everything priced at the ROBUST aspect
+        # (the chip is floorplanned once, then serves the whole fleet).
+        # Per-workload data-net power re-evaluated at t_robust:
+        tr2 = x[-1][None]  # (1, L, P)
+        f_r = As * tr2 + Bs / tr2 + Cs
+        for al, be, ga, crs in reps:
+            ln = al * tr2 + be / tr2 + ga
+            f_r = f_r + crs * ln * xp.maximum(ln - spacing, 0.0)
+        p_bus_r = pref * f_r[:-1]  # (W, L, P)
+
+        # Word-traffic energies through the same switched-cap roll-up:
+        # a spilled partial sum drains + reloads over 2*rows vertical hops,
+        # a K-split partial crosses one gutter trunk.  ``act`` rows carry
+        # switching-wires-per-word (coding multipliers already applied).
+        ln_vh = ln_d[:, V_HOP_DATA_IDX]  # (L, P) hop length at t_robust
+        ln_vx = ln_d[:, V_CROSS_DATA_IDX]
+        rep_vh = 1.0 + overhead * xp.maximum(ln_vh / spacing - 1.0, 0.0)
+        rep_vx = 1.0 + overhead * xp.maximum(ln_vx / spacing - 1.0, 0.0)
+        e_len = pref / freq_hz  # J per (um * switching wire * transfer)
+        e_spill = 2.0 * rows_arr * e_len * ln_vh * rep_vh * act[:, :, V_HOP_DATA_IDX, :]
+        e_trunk = e_len * ln_vx * rep_vx * act[:, :, V_CROSS_DATA_IDX, :]
+
+        # J/op = power x cycles / useful MACs; utilization folds rounds and
+        # ragged-tile idling.  util == 0 (zero-MAC GEMM, infeasible mapping)
+        # prices inf per-workload and drops out of the MAC-weighted fleet
+        # slot (its weight is zero under MAC weighting).
+        denom = freq_hz * rc_arr * util  # (W, L, P)
+        p_tot = p_bus_r + overhead_w[None] + static_w[:, None, :]
+        jpm = (
+            p_tot / xp.maximum(denom, 1e-30)
+            + spill_wpm * e_spill
+            + trunk_wpm * e_trunk
+        )
+        jpm = xp.where(util > 0.0, jpm, xp.inf)
+        live = (wcol > 0.0) & (util > 0.0)
+        out["j_per_mac"] = jpm
+        out["j_per_mac_robust"] = xp.sum(
+            wcol * xp.where(live, jpm, 0.0), axis=0
+        )
+
+    return out
 
 
 @functools.lru_cache(maxsize=32)
@@ -464,6 +523,23 @@ def _jitted_coeff_eval(rep_idx: tuple, nb: int, nn: int, donate: bool):
     return jax.jit(fn)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ObjectiveSpec:
+    """Inputs that turn the wire-power program into a J/op objective.
+
+    ``partition`` is the memoized ``lower_partition_coeffs`` entry — per
+    (GEMM workload, layout, point) utilization and spill/trunk words per
+    MAC.  ``static_w`` is the (W, P) calibrated non-bus power (fixed
+    interconnect + first-order PE/register compute term, see
+    ``repro.core.objective``).  Built by ``evaluate_fleet_objective``;
+    passing one to ``evaluate_layout_space`` makes the jitted program emit
+    ``j_per_mac``/``j_per_mac_robust`` alongside the wire-power outputs.
+    """
+
+    partition: object  # LoweredTensors from lower_partition_coeffs
+    static_w: np.ndarray  # (W, P)
+
+
 @dataclasses.dataclass(frozen=True)
 class LayoutSpaceEval:
     """(layout L, point P) evaluation of a design grid across families.
@@ -471,6 +547,8 @@ class LayoutSpaceEval:
     Workload-axis outputs are (W, L, P); per-(layout, point) outputs (L, P).
     Infeasible (layout, point) pairs — family/grid divisibility or an empty
     aspect window under ``max_envelope_aspect`` — carry ``inf`` powers.
+    The J/op fields are populated only when an ``ObjectiveSpec`` was priced
+    (``evaluate_fleet_objective``), else None.
     """
 
     grid: DesignGrid
@@ -484,6 +562,9 @@ class LayoutSpaceEval:
     bus_power_robust: np.ndarray  # (L, P) workload-weighted at aspect_robust
     overhead_w: np.ndarray  # (L, P) clk (+duty-cycled preload/drain)
     wirelength_um: np.ndarray  # (L, P) data-net wire length at aspect_robust
+    utilization: np.ndarray | None = None  # (W, L, P) useful-MAC fraction
+    j_per_mac: np.ndarray | None = None  # (W, L, P) total J per useful MAC
+    j_per_mac_robust: np.ndarray | None = None  # (L, P) MAC-weighted fleet J/op
     sweep_report: object | None = None  # SweepReport when run via ``sweep=``
 
     @property
@@ -502,6 +583,16 @@ class LayoutSpaceEval:
     def best_layout_name(self, i: int) -> str:
         return self.layouts[int(self.best_layout[i])]
 
+    @property
+    def best_layout_jpo(self) -> np.ndarray:
+        """(P,) index into ``layouts`` minimizing fleet J per useful MAC."""
+        if self.j_per_mac_robust is None:
+            raise ValueError(
+                "no J/op objective on this eval; use "
+                "repro.core.objective.evaluate_fleet_objective"
+            )
+        return np.argmin(self.j_per_mac_robust, axis=0)
+
 
 def evaluate_layout_space(
     grid: DesignGrid,
@@ -516,6 +607,7 @@ def evaluate_layout_space(
     use_jit: bool | None = None,
     gss_iters: int = 64,
     sweep=None,
+    objective: ObjectiveSpec | None = None,
 ) -> LayoutSpaceEval:
     """Evaluate every (design point, layout family) pair in one program.
 
@@ -524,19 +616,22 @@ def evaluate_layout_space(
     optional (W, P, n_lanes) per-lane activity arrays (measured:
     ``workloads.measured_design_lane_activities``) — with them, variable-
     width segments (multi-pod pod buses) are priced from the true lane
-    distribution instead of the mean-lane approximation.  The grid must be
-    bus-invert-free (BI is an activity transform on a coded bus; the
-    segment model prices physical lanes).
+    distribution instead of the mean-lane approximation.
+
+    Bus-invert points are priced through the lowered coding multipliers
+    (``repro.layout.coeffs.lower_coding_multipliers``): the schema's v-net
+    classes carry the coded/raw activity ratio inside the same jitted
+    program.  Lane arrays describe physical uncoded buses, so lanes and a
+    coded grid are mutually exclusive.
+
+    ``objective`` (an ``ObjectiveSpec``) additionally fuses the pod-
+    partition model into the program — ``j_per_mac``/``j_per_mac_robust``
+    outputs; build it via ``repro.core.objective.evaluate_fleet_objective``.
 
     ``sweep`` (a ``repro.core.sweep.SweepConfig``) routes evaluation
     through the chunked, checkpointed, guard-validated runner (see
     ``evaluate_design_space``); the returned eval carries ``sweep_report``.
     """
-    if np.any(np.asarray(grid.bus_invert)):
-        raise ValueError(
-            "layout engine prices physical (uncoded) buses; expand the space "
-            "with bus_invert=(False,)"
-        )
     p = grid.n_points
     a_h, a_v = _norm_activities(a_h, a_v, p)
     n_w = a_h.shape[0]
@@ -546,11 +641,27 @@ def evaluate_layout_space(
     if w.sum() <= 0:
         raise ValueError("weights must sum to a positive value")
     w = w / w.sum()
+    has_bi = bool(np.any(np.asarray(grid.bus_invert)))
+    if has_bi and (h_lanes is not None or v_lanes is not None):
+        raise ValueError(
+            "per-lane activities describe physical (uncoded) buses; drop the "
+            "lane arrays or expand the space with bus_invert=(False,)"
+        )
     for lanes, name in ((h_lanes, "h_lanes"), (v_lanes, "v_lanes")):
         if lanes is not None and (lanes.ndim != 3 or lanes.shape[:2] != (n_w, p)):
             raise ValueError(f"{name} must be (workloads, points, n_lanes)")
 
     layout_names = tuple(layouts)
+    if objective is not None:
+        part_host = objective.partition.host
+        if part_host["utilization"].shape != (n_w, len(layout_names), p):
+            raise ValueError(
+                "objective.partition does not match (workloads, layouts, "
+                "points); lower it with the same grid/layouts/gemms"
+            )
+        static_w = np.asarray(objective.static_w, float)
+        if static_w.shape != (n_w, p):
+            raise ValueError("objective.static_w must be (workloads, points)")
     if sweep is not None:
         use_jit_r = _HAS_JAX if use_jit is None else use_jit
         if use_jit_r and not _HAS_JAX:
@@ -560,7 +671,7 @@ def evaluate_layout_space(
         out, report = run_layout_sweep(
             grid, a_h, a_v, w, layouts=layout_names, h_lanes=h_lanes,
             v_lanes=v_lanes, cfg=cfg, gss_iters=gss_iters, use_jit=use_jit_r,
-            sweep=sweep,
+            sweep=sweep, objective=objective,
         )
         return LayoutSpaceEval(
             grid=grid, layouts=layout_names, sweep_report=report, **out
@@ -585,14 +696,44 @@ def evaluate_layout_space(
         cfg.drain_duty * cfg.drain_activity,
         cfg.clock_toggles_per_cycle,
     )
+    coding = lower_coding_multipliers(grid, a_v) if has_bi else None
+    if objective is not None:
+        rows_arr = np.asarray(grid.rows, float)
+        rc_arr = rows_arr * np.asarray(grid.cols, float)
     if use_jit:
         fn = _jitted_coeff_eval(coeffs.rep_idx, nb, nn, False)
         t = coeffs.device()
+        act_mult = coding.device()["act_mult"] if coding is not None else None
+        if objective is not None:
+            dv = objective.partition.device()
+            obj_args = (
+                dv["utilization"],
+                dv["spill_words_per_mac"],
+                dv["trunk_words_per_mac"],
+                rows_arr,
+                rc_arr,
+                static_w,
+            )
+        else:
+            obj_args = (None,) * 6
         out = fn(
-            *(t[k] for k in DEVICE_FIELDS), a_h, a_v, h_lanes, v_lanes, w, *scalars
+            *(t[k] for k in DEVICE_FIELDS), a_h, a_v, h_lanes, v_lanes, w,
+            *scalars, act_mult, *obj_args,
         )
     else:
         t = coeffs.host
+        act_mult = coding.host["act_mult"] if coding is not None else None
+        if objective is not None:
+            obj_args = (
+                part_host["utilization"],
+                part_host["spill_words_per_mac"],
+                part_host["trunk_words_per_mac"],
+                rows_arr,
+                rc_arr,
+                static_w,
+            )
+        else:
+            obj_args = (None,) * 6
         out = _coeff_eval_core(
             *(t[k] for k in DEVICE_FIELDS),
             a_h,
@@ -601,6 +742,8 @@ def evaluate_layout_space(
             v_lanes,
             w,
             *scalars,
+            act_mult,
+            *obj_args,
             rep_idx=coeffs.rep_idx,
             nb=nb,
             nn=nn,
@@ -611,6 +754,10 @@ def evaluate_layout_space(
     for key in ("bus_power_robust", "overhead_w", "wirelength_um"):
         out[key] = np.where(bad, np.inf, out[key])
     out["bus_power_opt"] = np.where(bad[None], np.inf, out["bus_power_opt"])
+    if objective is not None:
+        out["j_per_mac"] = np.where(bad[None], np.inf, out["j_per_mac"])
+        out["j_per_mac_robust"] = np.where(bad, np.inf, out["j_per_mac_robust"])
+        out["utilization"] = part_host["utilization"]
     return LayoutSpaceEval(
         grid=grid,
         layouts=layout_names,

@@ -370,9 +370,15 @@ def test_evaluate_layout_design_space_wrapper():
     assert ev2.layouts == ("uniform",)
     with pytest.raises(ValueError, match="unknown layout"):
         DesignSpace(rows=(8,), cols=(8,), layouts=("nope",))
+    # BI grids are priced through the lowered coding multipliers...
     bi = DesignSpace(rows=(8,), cols=(8,), bus_invert=(True,))
-    with pytest.raises(ValueError, match="bus_invert"):
-        evaluate_layout_design_space(bi, 0.2, 0.4, use_jit=False)
+    ev_bi = evaluate_layout_design_space(bi, 0.2, 0.4, use_jit=False)
+    assert np.isfinite(ev_bi.bus_power_robust).all()
+    # ... but lane arrays describe physical (uncoded) buses, so the
+    # combination is rejected.
+    lanes = np.full((1, 1, 64), 0.4)
+    with pytest.raises(ValueError, match="uncoded"):
+        evaluate_layout_design_space(bi, 0.2, 0.4, v_lanes=lanes, use_jit=False)
 
 
 # ---------------------------------------------------------------------------

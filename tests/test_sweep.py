@@ -318,7 +318,6 @@ def test_tampered_store_entry_fails_guard_and_recomputes(tmp_path):
             ("gss_iters", 64),
             ("chunk_size", 7),
             ("start_rung", "jit"),
-            ("apply_bi", True),
         ],
     )
     store = ContentStore(
