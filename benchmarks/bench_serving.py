@@ -1,0 +1,250 @@
+"""Serving-traffic subsystem: expansion throughput, oracle parity, J/token.
+
+Four checks, each a CSV/JSON row:
+
+  * ``serving/expand`` — ArchConfig -> per-block GEMM job-set expansion
+    throughput over every registry config x both regimes.  Asserts
+    >= 10^3 ServingGemm jobs/s — expansion must stay interactive-cheap
+    next to profiling and evaluation.
+  * ``serving/jobset_oracle`` — a numpy re-derivation of the
+    MAC-share-weighted job set for (mixtral_8x7b, decode_heavy): prefill
+    class rates recounted from the raw seeded request sample, weights
+    regrouped by shape-class key with vectorized group sums.  Asserts the
+    oracle weights match ``weighted_gemms`` BIT-exactly (same values,
+    same deterministic accumulation order) and sum to 1.
+  * ``serving/codesign`` — one measured config end-to-end: profile ->
+    fused fleet J/op -> J/token on a small grid.  Asserts J/token is
+    finite and positive and the best cell is feasible.
+  * ``serving/objective`` — the fused J/op program at fleet scale with
+    the SERVING workload axis live (the job set's GEMMs instead of the
+    3 ResNet layers).  Asserts the same >= 10^6 cells/s warm floor as
+    ``objective/engine`` (10^4 on the numpy fallback): the workload axis
+    swap must not regress the committed perf floor.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.core.design_space import DesignSpace
+from repro.core.objective import evaluate_fleet_objective
+from repro.layout.power import _HAS_JAX
+from repro.serving import (
+    codesign,
+    expand_arch,
+    get_preset,
+    sample_requests,
+    traffic_classes,
+    weighted_gemms,
+)
+
+try:
+    from benchmarks.bench_layout import THROUGHPUT_FLOOR, THROUGHPUT_FLOOR_NUMPY
+except ModuleNotFoundError:  # invoked as a bare script: sibling module import
+    from bench_layout import THROUGHPUT_FLOOR, THROUGHPUT_FLOOR_NUMPY
+
+EXPAND_FLOOR = 1_000  # ServingGemm jobs/s
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _expand_row(smoke: bool) -> dict:
+    regimes = (("prefill", 8, 1024), ("decode", 128, 1))
+    cfgs = [get_arch(a) for a in ARCH_IDS]
+
+    def sweep() -> int:
+        n = 0
+        for cfg in cfgs:
+            for regime, batch, seq in regimes:
+                n += len(expand_arch(cfg, regime, batch, seq))
+        return n
+
+    jobs = sweep()  # warm any per-config caches before timing
+    reps = 3 if smoke else 10
+    t = min(_timed(sweep) for _ in range(reps))
+    rate = jobs / t
+    assert rate >= EXPAND_FLOOR, (
+        f"expansion {rate:,.0f} jobs/s below the {EXPAND_FLOOR:,.0f} floor"
+    )
+    return {
+        "name": "serving/expand",
+        "us_per_call": t * 1e6 / jobs,
+        "cells_per_s": rate,
+        "layout": "",
+        "dataflow": "",
+        "derived": (
+            f"{rate:,.0f} GEMM jobs/s ({jobs} jobs: {len(cfgs)} configs x "
+            f"prefill+decode in {t*1e3:.1f}ms; floor {EXPAND_FLOOR:,}/s)"
+        ),
+    }
+
+
+def _oracle_row() -> dict:
+    cfg = get_arch("mixtral_8x7b")
+    tm = get_preset("decode_heavy")
+    jobset = weighted_gemms(cfg, tm)
+    classes = traffic_classes(tm)
+
+    # --- oracle 1: prefill class rates recounted from the raw sample -------
+    prompts, _gens, _arr = sample_requests(tm)
+    window_s = tm.n_samples / tm.qps
+    exps = np.ceil(np.log2(np.maximum(prompts, 1))).astype(np.int64)
+    buckets = np.clip(2**exps, tm.min_seq_bucket, tm.max_prompt)
+    for tc in classes:
+        if tc.regime != "prefill":
+            continue
+        rate_b = int((buckets == tc.seq_len).sum()) / window_s
+        batch = int(np.clip(round(rate_b * tm.prefill_window_s), 1, tm.max_prefill_batch))
+        assert batch == tc.batch and rate_b / batch == tc.execs_per_s, (
+            f"prefill class {tc} disagrees with the raw request sample"
+        )
+
+    # --- oracle 2: weights regrouped with vectorized group sums ------------
+    # Re-walk (traffic class x expansion) collecting per-shape-class
+    # contributions, then sum each group left-to-right — the same float
+    # program as the dict accumulation in weighted_gemms, derived
+    # independently, so equality must be BIT-exact.
+    contrib: dict[tuple, list[float]] = {}
+    for tc in classes:
+        for sg in expand_arch(cfg, tc.regime, tc.batch, tc.seq_len):
+            key = (sg.regime, sg.block, sg.gemm.m, sg.gemm.k, sg.gemm.n)
+            contrib.setdefault(key, []).append(tc.execs_per_s * sg.macs)
+    keys = list(contrib)
+    rate = np.asarray(
+        [np.asarray(v).cumsum()[-1] for v in contrib.values()], np.float64
+    )
+    oracle_w = rate / rate.sum()
+    assert len(keys) == len(jobset.gemms), "oracle shape-class count differs"
+    for key, g, r in zip(keys, jobset.gemms, jobset.regimes):
+        assert key[2:] == (g.m, g.k, g.n) and key[0] == r, (
+            f"oracle order differs at {key} vs {g}"
+        )
+    assert np.array_equal(oracle_w, np.asarray(jobset.weights)), (
+        "job-set weights are not bit-exact vs the numpy oracle"
+    )
+    assert abs(float(jobset.weights.sum()) - 1.0) < 1e-12
+    assert np.array_equal(rate, np.asarray(jobset.mac_rate))
+    return {
+        "name": "serving/jobset_oracle",
+        "us_per_call": 0.0,
+        "layout": "",
+        "dataflow": "",
+        "derived": (
+            f"{len(keys)} shape classes ({jobset.arch} x {jobset.traffic}): "
+            f"weights bit-exact vs numpy oracle, sum(w)=1, "
+            f"{jobset.macs_per_token/1e9:.2f} GMAC/token"
+        ),
+    }
+
+
+def _codesign_row(smoke: bool) -> dict:
+    space = DesignSpace(
+        rows=(16,),
+        cols=(8, 16),
+        input_bits=(16,),
+        dataflows=("WS", "OS"),
+        bus_invert=(False, True),
+    )
+    t0 = time.perf_counter()
+    r = codesign(
+        "mixtral_8x7b",
+        "decode_heavy",
+        space=space,
+        layouts=("uniform", "pods2x2"),
+    )
+    t = time.perf_counter() - t0
+    j = np.asarray(r.eval.j_per_mac_robust)
+    li, pi = r.best_cell
+    assert np.isfinite(j[li, pi]) and r.j_per_token > 0, (
+        "codesign best cell is not finite/positive"
+    )
+    return {
+        "name": "serving/codesign",
+        "us_per_call": t * 1e6,
+        "layout": "+".join(r.layouts),
+        "dataflow": "WS+OS",
+        "derived": (
+            f"measured end-to-end ({r.arch} x {r.traffic}): "
+            f"{len(r.jobset.gemms)} GEMMs -> best {r.describe_cell((li, pi))}, "
+            f"{r.j_per_token:.3e} J/token in {t:.1f}s"
+        ),
+    }
+
+
+def _objective_row() -> dict:
+    # The bench_objective fleet grid, with the serving job set as the
+    # workload axis (top shape classes by MAC share) and rng-synthetic
+    # activities — same floor discipline: fleet-scale or nothing.
+    big = DesignSpace(
+        rows=(8, 16, 32, 64, 96, 128),
+        cols=(8, 16, 32, 64, 128, 192, 256, 512),
+        input_bits=(4, 8, 16),
+        dataflows=("WS", "OS"),
+        pe_area_um2=(400.0, 900.0, 1600.0, 2500.0),
+        bus_invert=(False, True),
+    )
+    grid = big.expand()
+    jobset = weighted_gemms(get_arch("mixtral_8x7b"), get_preset("decode_heavy"))
+    top = np.argsort(-np.asarray(jobset.weights))[:3]
+    gemms = [jobset.gemms[i] for i in top]
+    w = np.asarray(jobset.weights)[top]
+    families = ("uniform", "serpentine2", "pods2x2", "pods4x4")
+    rng = np.random.default_rng(0)
+    a_h = rng.uniform(0.1, 0.4, (len(gemms), grid.n_points))
+    a_v = rng.uniform(0.2, 0.6, (len(gemms), grid.n_points))
+    use_jit = _HAS_JAX
+    floor = THROUGHPUT_FLOOR if use_jit else THROUGHPUT_FLOOR_NUMPY
+
+    call = lambda: evaluate_fleet_objective(
+        grid,
+        a_h,
+        a_v,
+        gemms,
+        layouts=families,
+        weights=w,
+        use_jit=use_jit,
+        macs_per_token=jobset.macs_per_token,
+    )
+    ev = call()  # compile
+    call()  # settle device caches
+    t_eval = min(_timed(call) for _ in range(5))
+    n_cells = grid.n_points * len(families)
+    rate = n_cells / t_eval
+    assert rate >= floor, (
+        f"serving objective {rate:,.0f} cells/s below the {floor:,.0f} floor"
+    )
+    assert np.isfinite(np.asarray(ev.j_per_token_robust)).any()
+    return {
+        "name": "serving/objective",
+        "us_per_call": t_eval * 1e6 / n_cells,
+        "cells_per_s": rate,
+        "layout": "+".join(families),
+        "dataflow": "WS+OS",
+        "derived": (
+            f"jit={use_jit} {rate:,.0f} (point x layout) J/token cells/s warm "
+            f"({grid.n_points} points x {len(families)} families x "
+            f"{len(gemms)} serving GEMMs in {t_eval*1e3:.1f}ms; "
+            f"floor {floor:,.0f}/s)"
+        ),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    return [
+        _expand_row(smoke),
+        _oracle_row(),
+        _codesign_row(smoke),
+        _objective_row(),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r)

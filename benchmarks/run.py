@@ -40,6 +40,7 @@ from benchmarks import (
     bench_network_profile,
     bench_objective,
     bench_resilience,
+    bench_serving,
     bench_table1_layers,
 )
 
@@ -51,6 +52,7 @@ MODULES = [
     ("design_space", bench_design_space),
     ("layout", bench_layout),
     ("objective", bench_objective),
+    ("serving", bench_serving),
     ("kernels", bench_kernels),
     ("activity_profile", bench_activity_profile),
     ("network_profile", bench_network_profile),
@@ -124,9 +126,9 @@ def main(argv: list[str] | None = None) -> None:
             json.dump(report, f, indent=1)
         # Repo-root trajectory snapshot: the per-PR row dump CI uploads so
         # throughput (cells_per_s) and flip counts diff across PRs.
-        bench_pr = pathlib.Path(__file__).resolve().parent.parent / "BENCH_9.json"
+        bench_pr = pathlib.Path(__file__).resolve().parent.parent / "BENCH_10.json"
         with open(bench_pr, "w") as f:
-            json.dump({"pr": 9, "rows": report["rows"]}, f, indent=1)
+            json.dump({"pr": 10, "rows": report["rows"]}, f, indent=1)
     if failed:
         sys.exit(1)
 

@@ -33,6 +33,7 @@ total useful MACs for the workload mix.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
@@ -99,6 +100,7 @@ def evaluate_fleet_objective(
     use_jit: bool | None = None,
     gss_iters: int = 64,
     sweep=None,
+    macs_per_token: float | None = None,
 ) -> LayoutSpaceEval:
     """Rank layout families on total J per useful MAC in one jitted program.
 
@@ -111,6 +113,13 @@ def evaluate_fleet_objective(
     fields are populated next to the wire-power outputs — compare
     ``best_layout`` (bus power only) against ``best_layout_jpo`` to find
     the cells where utilization and traffic flip the winner.
+
+    ``macs_per_token`` is the serving-traffic aggregation slot (J/token =
+    J/op x MACs/token): pass a job set's MAC/s-over-tokens/s (e.g.
+    ``repro.serving.traffic.ServingJobSet.macs_per_token``, with
+    ``weights`` set to its MAC-rate shares so the robust slot is the
+    traffic mix's fleet J/op) and the eval's ``j_per_token_robust``
+    property prices joules per served token per (layout, point) cell.
     """
     gemms = list(gemms)
     if not gemms:
@@ -137,7 +146,7 @@ def evaluate_fleet_objective(
     static_w = np.broadcast_to(
         fleet_static_power(grid, a_h, a_v, energy_cfg=energy_cfg), (len(gemms), p)
     ).copy()
-    return evaluate_layout_space(
+    ev = evaluate_layout_space(
         grid,
         a_h,
         a_v,
@@ -149,3 +158,8 @@ def evaluate_fleet_objective(
         sweep=sweep,
         objective=ObjectiveSpec(partition=partition, static_w=static_w),
     )
+    if macs_per_token is not None:
+        if macs_per_token <= 0:
+            raise ValueError("macs_per_token must be positive")
+        ev = dataclasses.replace(ev, macs_per_token=float(macs_per_token))
+    return ev

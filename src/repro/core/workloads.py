@@ -13,6 +13,7 @@ Two sources:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Sequence
 
 import numpy as np
@@ -33,6 +34,8 @@ __all__ = [
     "gemm_job",
     "profile_network",
     "measured_design_activities",
+    "measured_design_gemm_activities",
+    "gemm_profile_seed",
     "measured_design_lane_activities",
     "partition_gemm",
     "design_pod_partition",
@@ -416,6 +419,114 @@ def measured_design_activities(
     )
     a_h = class_a_h[:, point_class]
     a_v = class_a_v[:, point_class]
+    return (a_h, a_v, stats) if return_stats else (a_h, a_v)
+
+
+def gemm_profile_seed(
+    gemm: Gemm,
+    *,
+    clip: tuple[int, int, int] | None = (128, 512, 256),
+    density: float | None = None,
+) -> int:
+    """Content-keyed operand seed for one profiled GEMM shape class.
+
+    Keyed on the CLIPPED dims (+ density) — the quantities that actually
+    determine the synthetic operands — so the same shape class reached
+    from different models / traffic mixes synthesizes identical operands
+    and lands on (and hits) the same content-keyed profile-cache entries.
+    """
+    m, k, n = gemm.m, gemm.k, gemm.n
+    if clip is not None:
+        m, k, n = min(m, clip[0]), min(k, clip[1]), min(n, clip[2])
+    key = f"{m}|{k}|{n}|{density}".encode()
+    return int.from_bytes(hashlib.sha256(key).digest()[:4], "little")
+
+
+def measured_design_gemm_activities(
+    grid,
+    gemms: Sequence[Gemm],
+    *,
+    densities: Sequence[float | None] | None = None,
+    seeds: Sequence[int] | None = None,
+    clip: tuple[int, int, int] | None = (128, 512, 256),
+    profile_cols: int | None = None,
+    backend: str | None = None,
+    use_cache: bool = True,
+    return_stats: bool = False,
+):
+    """Measured (G, P) activity arrays for a GEMM job set — the serving
+    adapter mirroring ``measured_design_activities``.
+
+    One ``gemm_job`` per activity class per GEMM (same class invariance
+    arguments: WS classes are (rows, b_h, b_v_data), OS classes the
+    geometry-free (b_h, b_v_data)) feeds every point of the grid.
+    ``clip`` bounds the profiled slice of LLM-sized GEMMs (toggle RATES
+    converge long before full model dims; the J/op objective still prices
+    utilization/spill/trunk from the FULL dims).  Seeds default to the
+    content-keyed ``gemm_profile_seed`` so shape classes shared across
+    models and traffic mixes dedup in the profile cache.
+    """
+    from repro.core.pipeline import run_profile_batch
+
+    gemms = list(gemms)
+    if not gemms:
+        raise ValueError("no gemms")
+    dens = list(densities) if densities is not None else [None] * len(gemms)
+    if len(dens) != len(gemms):
+        raise ValueError("densities must match the GEMM axis")
+    if seeds is None:
+        seeds = [
+            gemm_profile_seed(g, clip=clip, density=d) for g, d in zip(gemms, dens)
+        ]
+    elif len(list(seeds)) != len(gemms):
+        raise ValueError("seeds must match the GEMM axis")
+    classes, point_class = _activity_classes(grid)
+    cols_fix = int(profile_cols) if profile_cols is not None else int(np.min(grid.cols))
+    rows_fix = int(np.min(grid.rows))  # OS activities are rows-invariant
+    # Serving job sets repeat operand content heavily: after clipping, many
+    # distinct full-dim GEMMs synthesize IDENTICAL operands (same clipped
+    # dims + density + seed).  Profile each unique operand class once and
+    # scatter back over the GEMM axis — a job-set of ~70 GEMMs typically
+    # collapses to ~15 profiles per activity class.
+    uniq_keys: dict[tuple, int] = {}
+    gemm_uniq = np.empty(len(gemms), np.int64)
+    uniq_items: list[tuple[Gemm, float | None, int]] = []
+    for i, g in enumerate(gemms):
+        m, k, n = g.m, g.k, g.n
+        if clip is not None:
+            m, k, n = min(m, clip[0]), min(k, clip[1]), min(n, clip[2])
+        key = (m, k, n, dens[i], int(seeds[i]))
+        u = uniq_keys.get(key)
+        if u is None:
+            u = len(uniq_items)
+            uniq_keys[key] = u
+            uniq_items.append((g, dens[i], int(seeds[i])))
+        gemm_uniq[i] = u
+    jobs = [
+        gemm_job(
+            g,
+            rows=cls[1] if cls[0] == "WS" else rows_fix,
+            cols=cols_fix,
+            bits=cls[-2],
+            b_v=cls[-1],
+            seed=seed,
+            density=density,
+            clip=clip,
+            dataflow=cls[0],
+        )
+        for cls in classes
+        for g, density, seed in uniq_items
+    ]
+    profiles, stats = run_profile_batch(jobs, backend=backend, use_cache=use_cache)
+    n_u = len(uniq_items)
+    class_a_h = np.asarray(
+        [[profiles[c * n_u + u].a_h for c in range(len(classes))] for u in range(n_u)]
+    )
+    class_a_v = np.asarray(
+        [[profiles[c * n_u + u].a_v for c in range(len(classes))] for u in range(n_u)]
+    )
+    a_h = class_a_h[gemm_uniq][:, point_class]
+    a_v = class_a_v[gemm_uniq][:, point_class]
     return (a_h, a_v, stats) if return_stats else (a_h, a_v)
 
 

@@ -565,6 +565,10 @@ class LayoutSpaceEval:
     utilization: np.ndarray | None = None  # (W, L, P) useful-MAC fraction
     j_per_mac: np.ndarray | None = None  # (W, L, P) total J per useful MAC
     j_per_mac_robust: np.ndarray | None = None  # (L, P) MAC-weighted fleet J/op
+    # MACs per served token of the workload mix (serving co-design: set by
+    # ``evaluate_fleet_objective(..., macs_per_token=)`` from a traffic
+    # model's MAC/s over tokens/s) — turns J/op answers into J/token
+    macs_per_token: float | None = None
     sweep_report: object | None = None  # SweepReport when run via ``sweep=``
 
     @property
@@ -592,6 +596,22 @@ class LayoutSpaceEval:
                 "repro.core.objective.evaluate_fleet_objective"
             )
         return np.argmin(self.j_per_mac_robust, axis=0)
+
+    @property
+    def j_per_token_robust(self) -> np.ndarray:
+        """(L, P) joules per served token: J/op x MACs/token.
+
+        Requires both a priced J/op objective and a ``macs_per_token``
+        aggregation slot (a serving traffic mix — see
+        ``repro.serving.codesign``).
+        """
+        if self.j_per_mac_robust is None or self.macs_per_token is None:
+            raise ValueError(
+                "J/token needs a priced J/op objective AND macs_per_token; "
+                "use repro.core.objective.evaluate_fleet_objective("
+                "..., macs_per_token=jobset.macs_per_token)"
+            )
+        return np.asarray(self.j_per_mac_robust) * float(self.macs_per_token)
 
 
 def evaluate_layout_space(
